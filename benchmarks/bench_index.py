@@ -1,0 +1,54 @@
+"""Paper Table IV: index size (entries) and construction time for
+CPQx / iaCPQx / Path / iaPath, plus the Thm. 4.2 size comparison."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import baselines, capacity, interest
+from repro.core import index as cindex
+
+from .bench_query import interests_for
+from .common import DATASETS, emit, timeit
+
+
+def main() -> None:
+    for ds in ["robots-like", "advogato-like", "gmark-small", "gmark-medium"]:
+        g = DATASETS[ds]()
+        ints = interests_for(g)
+        caps = capacity.estimate_build_caps(g, 2)
+        stats = capacity.graph_stats(g, 2)
+
+        us = timeit(lambda: cindex.build(g, 2, caps), warmup=1, iters=2)
+        idx = cindex.build(g, 2, caps)
+        l2c, c2p = idx.size_entries()
+        emit(f"table4/{ds}/CPQx_IT", us,
+             f"IS={l2c + c2p} classes={idx.n_classes} pairs={idx.n_pairs} "
+             f"gamma={stats['gamma']:.2f}")
+
+        us = timeit(lambda: interest.build_interest(g, 2, ints, caps),
+                    warmup=1, iters=2)
+        ia = interest.build_interest(g, 2, ints, caps)
+        l2c_i, c2p_i = ia.size_entries()
+        emit(f"table4/{ds}/iaCPQx_IT", us,
+             f"IS={l2c_i + c2p_i} classes={ia.n_classes}")
+
+        us = timeit(lambda: baselines.build_path(g, 2, caps=caps),
+                    warmup=1, iters=2)
+        pi = baselines.build_path(g, 2, caps=caps)
+        emit(f"table4/{ds}/Path_IT", us, f"IS={pi.size_entries()}")
+
+        us = timeit(lambda: baselines.build_path(g, 2, interests=ints,
+                                                 caps=caps),
+                    warmup=1, iters=2)
+        iapi = baselines.build_path(g, 2, interests=ints, caps=caps)
+        emit(f"table4/{ds}/iaPath_IT", us, f"IS={iapi.size_entries()}")
+
+        # Thm. 4.2: CPQx never larger than Path; interest-aware smaller
+        assert c2p <= pi.size_entries()
+        assert l2c_i + c2p_i <= l2c + c2p
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

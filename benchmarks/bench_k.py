@@ -1,0 +1,41 @@
+"""Paper Figs. 14/15: behavior in k — query time, index size, and build
+time for k in {1, 2, 3} (iaCPQx, as the paper's scalable variant)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import capacity, interest
+from repro.core.engine import Engine
+from repro.core.query import instantiate_template
+
+from .bench_query import interests_for
+from .common import DATASETS, emit, timeit
+
+
+def main() -> None:
+    g = DATASETS["robots-like"]()
+    rng = np.random.default_rng(1)
+    present = np.unique(g.lbl)
+    for k in (1, 2, 3):
+        ints = [s[:k] if len(s) > k else s for s in interests_for(g)]
+        caps = capacity.estimate_build_caps(g, k)
+        us_build = timeit(lambda: interest.build_interest(g, k, ints, caps),
+                          warmup=0, iters=1)
+        ia = interest.build_interest(g, k, ints, caps)
+        l2c, c2p = ia.size_entries()
+        emit(f"fig15/robots-like/k{k}/build", us_build,
+             f"IS={l2c + c2p} classes={ia.n_classes}")
+        eng = Engine(ia)
+        qs = [instantiate_template("S", rng.choice(present, 4).tolist())
+              for _ in range(3)]
+        qs += [instantiate_template("C4", rng.choice(present, 4).tolist())
+               for _ in range(3)]
+        us = timeit(lambda: [eng.execute(q) for q in qs]) / len(qs)
+        emit(f"fig14/robots-like/k{k}/query", us, "S+C4 mix")
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

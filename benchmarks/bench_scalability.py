@@ -1,0 +1,42 @@
+"""Paper Fig. 11: iaCPQx query time as the (gMark citation) graph grows.
+CPU-scaled sizes; the claim is near-flat growth for class-space queries
+and bounded growth for join-heavy ones."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import capacity, interest
+from repro.core.engine import Engine
+from repro.core.query import instantiate_template
+from repro.data.graphs import gmark_citation
+
+from .common import emit, timeit
+
+# the paper's five citation-schema interests (Sec. VI "Methods"):
+# cites-cites, cites-supervises, publishesIn-heldIn, worksIn-heldIn⁻¹,
+# livesIn-worksIn⁻¹  (base labels: 0..5, inverse = +6)
+GMARK_INTERESTS = [(0, 0), (0, 1), (4, 5), (3, 11), (2, 9)]
+
+
+def main() -> None:
+    rng = np.random.default_rng(2)
+    for n in (250, 500, 1000, 2000):
+        g = gmark_citation(n, avg_degree=6, seed=5)
+        caps = capacity.estimate_build_caps(g, 2)
+        ia = interest.build_interest(g, 2, GMARK_INTERESTS, caps)
+        eng = Engine(ia)
+        present = np.unique(g.lbl)
+        qs = [instantiate_template("S", rng.choice(present, 4).tolist())
+              for _ in range(3)]
+        qs += [instantiate_template("T", rng.choice(present, 3).tolist())
+               for _ in range(3)]
+        us = timeit(lambda: [eng.execute(q) for q in qs]) / len(qs)
+        emit(f"fig11/gmark-n{n}/query", us,
+             f"edges={g.n_edges} classes={ia.n_classes}")
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Tables V/VI/VII: maintenance — edge insert/delete and interest
+insert/delete times, plus the index-growth ratio under lazy updates."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.maintenance import MaintainableIndex
+
+from .bench_query import interests_for
+from .common import DATASETS, emit, timeit
+
+
+def main() -> None:
+    for ds in ["robots-like", "gmark-small"]:
+        g = DATASETS[ds]()
+        ints = interests_for(g)
+        rng = np.random.default_rng(0)
+
+        mi = MaintainableIndex.build(g, 2)
+        base = mi.g._base_edges()
+        size0 = sum(mi.size_entries())
+
+        def del_edge():
+            e = base[int(rng.integers(0, base.shape[0]))]
+            try:
+                mi.delete_edge(int(e[0]), int(e[1]), int(e[2]))
+            except Exception:
+                pass
+
+        us = timeit(del_edge, warmup=0, iters=5)
+        emit(f"table5/{ds}/edge_deletion", us, "")
+
+        def ins_edge():
+            mi.insert_edge(int(rng.integers(0, g.n_vertices)),
+                           int(rng.integers(0, g.n_vertices)),
+                           int(rng.integers(0, g.n_labels)))
+
+        us = timeit(ins_edge, warmup=0, iters=5)
+        emit(f"table5/{ds}/edge_insertion", us, "")
+        growth = sum(mi.size_entries()) / max(size0, 1)
+        emit(f"table7/{ds}/size_ratio_after_10_updates", growth * 1000,
+             f"ratio={growth:.3f} splits={mi.n_splits}")
+
+        mia = MaintainableIndex.build(g, 2, interests=ints)
+        us = timeit(lambda: mia.delete_interest(ints[0]), warmup=0, iters=1)
+        emit(f"table6/{ds}/interest_deletion", us, "")
+        us = timeit(lambda: mia.insert_interest(ints[0]), warmup=0, iters=1)
+        emit(f"table6/{ds}/interest_insertion", us, "")
+
+
+if __name__ == "__main__":
+    main()

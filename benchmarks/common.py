@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing: datasets scaled for CPU CI, timing
+helpers, CSV emission.  Every bench prints ``name,us_per_call,derived``
+rows so ``python -m benchmarks.run`` produces one machine-readable
+stream (deliverable (d): one bench per paper table/figure)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.graph import LabeledGraph, example_graph
+from repro.data.graphs import gmark_citation, powerlaw_graph
+
+# CPU-scaled stand-ins for the paper's dataset suite (Table II): same
+# generator *families* (social-like powerlaw with exponential labels;
+# gMark citation schema), sized for CI.
+DATASETS = {
+    "robots-like": lambda: powerlaw_graph(300, 1200, n_labels=4, seed=1),
+    "advogato-like": lambda: powerlaw_graph(600, 4000, n_labels=4, seed=2),
+    "gmark-small": lambda: gmark_citation(500, avg_degree=6, seed=3),
+    "gmark-medium": lambda: gmark_citation(1500, avg_degree=6, seed=4),
+    "example": example_graph,
+}
+
+TEMPLATE_NAMES = ["C2", "C4", "C2i", "T", "Ti", "S", "Si", "TT", "St",
+                  "TC", "SC", "ST"]
+
+
+def timeit(fn, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) over iters after warmup."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

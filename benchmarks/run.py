@@ -1,0 +1,52 @@
+"""Benchmark driver — one bench per paper table/figure (deliverable (d)).
+
+Prints ``name,us_per_call,derived`` CSV rows.  CPU-scaled datasets from
+the same generator families as the paper's suite; correctness gates
+(all methods agree with the semantics oracle) run inside each bench.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6 table4 ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "fig6": "benchmarks.bench_query",  # query time per template x method
+    "table3": "benchmarks.bench_pruning",  # pruning power
+    "table4": "benchmarks.bench_index",  # index size + build time
+    "table5": "benchmarks.bench_update",  # maintenance (+ tables 6/7)
+    "fig14": "benchmarks.bench_k",  # behavior in k (+ fig 15)
+    "fig11": "benchmarks.bench_scalability",  # graph-size scaling
+    "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp reference
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {sorted(BENCHES)}")
+    args = ap.parse_args()
+    todo = args.only or list(BENCHES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failed = []
+    for key in todo:
+        mod_name = BENCHES[key]
+        t1 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {key} done in {time.time()-t1:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failed.append(key)
+            print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benches failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

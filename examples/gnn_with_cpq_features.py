@@ -1,0 +1,75 @@
+"""The paper's technique feeding the GNN substrate: CPQ-equivalence
+class ids as *language-aware structural features* for node-level GNNs.
+
+For each vertex v we derive a feature vector from the CPQx partition:
+which equivalence classes v participates in as a source (bucketed
+histogram over class ids).  Vertices that are CPQ_k-indistinguishable
+get identical features — a structural positional encoding strictly
+stronger than degree features for any downstream task expressible in
+CPQ_k (Thm. 4.1).
+
+    PYTHONPATH=src python examples/gnn_with_cpq_features.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import index as cindex
+from repro.data.graphs import gmark_citation
+from repro.models import gnn as G
+from repro.train.optim import adamw_init, adamw_update
+
+
+def cpq_class_features(g, idx, n_buckets: int = 16) -> np.ndarray:
+    """(|V|, n_buckets) histogram of the CPQx classes each vertex sources."""
+    v = np.asarray(idx.arrays.pair_v)[: idx.n_pairs]
+    cls = np.asarray(idx.arrays.pair_cls)[: idx.n_pairs]
+    feats = np.zeros((g.n_vertices, n_buckets), np.float32)
+    np.add.at(feats, (v, cls % n_buckets), 1.0)
+    return np.log1p(feats)
+
+
+def main() -> None:
+    graph = gmark_citation(300, avg_degree=5, seed=0)
+    idx = cindex.build(graph, 2)
+    feats = cpq_class_features(graph, idx)
+    print(f"graph {graph}; CPQx classes: {idx.n_classes}; "
+          f"feature matrix {feats.shape}")
+
+    # node-level task: predict out-degree (sanity target) from structure
+    deg = graph.out_degree().astype(np.float32)[:, None]
+    cfg = get_arch("gatedgcn").smoke
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, d_in=feats.shape[1], d_out=1)
+    gb = G.GraphBatch(
+        node_feat=jnp.asarray(feats),
+        edge_feat=jnp.zeros((graph.n_edges, 4), jnp.float32),
+        senders=jnp.asarray(graph.src), receivers=jnp.asarray(graph.dst),
+        node_mask=jnp.ones(graph.n_vertices, bool),
+        edge_mask=jnp.ones(graph.n_edges, bool),
+        positions=None, graph_ids=jnp.zeros(graph.n_vertices, jnp.int32),
+        n_graphs=1,
+    )
+    params = G.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    targets = jnp.asarray(deg)
+
+    @jax.jit
+    def step(p, o):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: G.train_loss(cfg, p, gb, targets), has_aux=True)(p)
+        p, o, _ = adamw_update(grads, o, p, lr=3e-3)
+        return p, o, loss
+
+    for i in range(60):
+        params, opt, loss = step(params, opt)
+        if i % 20 == 0:
+            print(f"  step {i:3d}  mse {float(loss):.4f}")
+    print(f"final mse {float(loss):.4f} — language-aware features train ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched-request LM serving example: slot-based continuous batching
+over the gemma2 (smoke) model — requests arrive, claim slots, decode at
+their own positions, and finished slots are reused immediately.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    raise SystemExit(subprocess.call([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "gemma2-2b", "--requests", "6", "--slots", "3",
+        "--max-new", "8", "--max-len", "48",
+    ]))
+
+
+if __name__ == "__main__":
+    main()

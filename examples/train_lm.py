@@ -1,0 +1,42 @@
+"""End-to-end LM training driver (deliverable (b)): trains a ~100M-param
+MiniCPM-style model for a few hundred steps with the WSD schedule,
+checkpointing, resume, and straggler logging.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+This wraps launch/train.py with the "~100M for a few hundred steps"
+configuration the assignment asks for; on CPU expect a few minutes.
+Use --tiny for a seconds-long smoke run.
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "minicpm-2b",
+        "--schedule", "wsd",
+        "--ckpt-dir", args.ckpt_dir,
+        "--resume",
+    ]
+    if args.tiny:
+        cmd += ["--steps", "30", "--batch", "4", "--seq", "64", "--scale", "1"]
+    else:
+        # ~100M params: smoke config widened 4x, batch 8 x 256 tokens
+        cmd += ["--steps", str(args.steps), "--batch", "8", "--seq", "256",
+                "--scale", "4"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .checkpoint import (  # noqa: F401
+    latest_step,
+    load_checkpoint,
+    restore_sharded,
+    save_checkpoint,
+    wait_for_writes,
+)

@@ -1,0 +1,32 @@
+"""The paper's own engine as a distributed workload (bonus dry-run cell):
+CPQx index build + conjunction-heavy query processing over a sharded pair
+table.  Shapes model the paper's largest interest-aware settings."""
+
+import dataclasses
+
+from repro.configs import ArchSpec, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    name: str = "cpqx-engine"
+    k: int = 2
+    n_labels: int = 8
+
+
+CONFIG = EngineConfig()
+SMOKE = EngineConfig(n_labels=3)
+
+SPEC = ArchSpec(
+    arch_id="cpqx-engine", family="engine", config=CONFIG, smoke=SMOKE,
+    shapes=(
+        ShapeSpec("build_64m", "engine",
+                  {"n_pairs": 64 * 2**20, "n_edges": 16 * 2**20,
+                   "n_classes": 2**20, "n_seqs": 2**14}),
+        ShapeSpec("query_s", "engine",
+                  {"n_pairs": 64 * 2**20, "n_classes": 2**20,
+                   "lookup_classes": 2**16, "join_cap": 2**22}),
+    ),
+    notes="pair tables sharded over (data, model) flattened; distributed "
+          "join via all_to_all hash partitioning (core/distributed.py).",
+)

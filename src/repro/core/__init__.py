@@ -1,0 +1,3 @@
+"""The paper's contribution: CPQ-aware path indexing (CPQx / iaCPQx),
+the capacity-padded relational substrate, the device query engine, lazy
+maintenance, baselines, the semantics oracle, and shard_map distribution."""

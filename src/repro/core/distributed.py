@@ -1,0 +1,239 @@
+"""Distributed CPQx — the engine's pair tables sharded over a mesh axis,
+with all_to_all hash repartitioning for joins (shard_map manual
+collectives; DESIGN.md §5).
+
+Data layout
+-----------
+A *sharded relation* is a Relation whose column arrays carry a leading
+``shards`` axis sharded over the mesh: cols (n_shards, cap, ...), count
+(n_shards,).  Rows live on the shard that owns their partition key
+(``mix32(key) % n_shards``), except "replicated" relations (class-id
+lists — small by the paper's central observation) which are identical on
+every shard.
+
+Operators (all inside one shard_map):
+  * ``exchange``            fixed-capacity all_to_all bucket shuffle
+  * ``sharded_join``        repartition by join key -> local expansion join
+  * ``sharded_conjunction`` replicated class intersect -> sharded
+                            materialize -> local intersection
+  * ``build_level``         one level of Algorithm 1's path join at scale
+
+The fixed bucket capacity is the static-shape contract: each exchange
+moves (n_shards, bucket_cap, arity) per shard; overflow is flagged and
+the host retries with doubled capacity exactly like the local engine.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from . import relational as R
+
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------- #
+# local helpers (run per shard inside shard_map)
+# ---------------------------------------------------------------------- #
+
+
+def _bucket_of(key: jax.Array, n_shards: int) -> jax.Array:
+    return (R.mix32(key, 0xB0C4) % jnp.uint32(n_shards)).astype(I32)
+
+
+def _pack_buckets(cols: tuple, valid: jax.Array, bucket: jax.Array,
+                  n_shards: int, bucket_cap: int):
+    """Arrange local rows into (n_shards, bucket_cap, arity) by bucket —
+    sort by bucket then slot-gather (the MoE-dispatch pattern: no
+    scatter).  Returns (packed cols tuple, per-bucket counts, overflow)."""
+    cap = cols[0].shape[0]
+    bkey = jnp.where(valid, bucket, n_shards)  # invalid -> trash bucket
+    order = jax.lax.sort((bkey, jnp.arange(cap, dtype=I32)), num_keys=1,
+                         is_stable=True)[1]
+    sorted_cols = tuple(c[order] for c in cols)
+    sorted_b = bkey[order]
+    offs = jnp.searchsorted(sorted_b, jnp.arange(n_shards, dtype=I32),
+                            side="left").astype(I32)
+    ends = jnp.searchsorted(sorted_b, jnp.arange(n_shards, dtype=I32),
+                            side="right").astype(I32)
+    sizes = ends - offs
+    overflow = jnp.any(sizes > bucket_cap)
+    b = jnp.arange(n_shards * bucket_cap, dtype=I32) // bucket_cap
+    slot = jnp.arange(n_shards * bucket_cap, dtype=I32) % bucket_cap
+    src = jnp.clip(offs[b] + slot, 0, cap - 1)
+    ok = slot < sizes[b]
+    packed = tuple(
+        jnp.where(ok, c[src], R.SENTINEL).reshape(n_shards, bucket_cap)
+        for c in sorted_cols
+    )
+    return packed, jnp.minimum(sizes, bucket_cap).astype(I32), overflow
+
+
+def _exchange(packed: tuple, counts: jax.Array, axis: str):
+    """all_to_all: bucket b of shard s -> shard b.  packed cols are
+    (n_shards, bucket_cap); returns (n_shards, bucket_cap) = one row-block
+    from each peer, plus the per-peer counts."""
+    out = tuple(
+        jax.lax.all_to_all(c, axis, split_axis=0, concat_axis=0, tiled=True)
+        for c in packed
+    )
+    cnt = jax.lax.all_to_all(counts, axis, split_axis=0, concat_axis=0,
+                             tiled=True)
+    return out, cnt
+
+
+def _flatten_received(received: tuple, counts: jax.Array):
+    """(n_shards, bucket_cap) blocks -> flat relation (sorted, compacted)."""
+    flat = tuple(c.reshape(-1) for c in received)
+    total = jnp.sum(counts)
+    rel = R.Relation(flat, jnp.asarray(flat[0].shape[0], I32),
+                     jnp.asarray(False))
+    # SENTINEL-padded rows inside each block sort to the end
+    rel = R.rel_sort(rel)
+    return R.Relation(rel.cols, total.astype(I32), rel.overflow)
+
+
+# ---------------------------------------------------------------------- #
+# sharded operators
+# ---------------------------------------------------------------------- #
+
+
+def repartition(cols: tuple, count: jax.Array, key_col: int, n_shards: int,
+                bucket_cap: int, axis: str):
+    """Move every row to the shard owning hash(key).  Local view in/out.
+    Returns (cols, count, overflow) with capacity n_shards*bucket_cap."""
+    valid = jnp.arange(cols[0].shape[0], dtype=I32) < count
+    bucket = _bucket_of(cols[key_col], n_shards)
+    packed, sizes, ovf = _pack_buckets(cols, valid, bucket, n_shards,
+                                       bucket_cap)
+    received, cnt = _exchange(packed, sizes, axis)
+    rel = _flatten_received(received, cnt)
+    return rel.cols, rel.count, ovf | rel.overflow
+
+
+def sharded_join_local(a_cols, a_count, b_cols, b_count, out_cap: int,
+                       b_sorted: bool = False):
+    """Local leg of the distributed join: both sides already partitioned
+    by the join key (a's key col 1, b's key col 0).  ``b_sorted``: skip
+    the build-side sort when the producer already emits sorted rows
+    (repartition's _flatten_received does — §Perf iteration: the double
+    sort was ~40% of the join's local traffic)."""
+    a = R.Relation(a_cols, a_count, jnp.asarray(False))
+    b = R.Relation(b_cols, b_count, jnp.asarray(False))
+    if not b_sorted:
+        b = R.rel_sort(b)
+    out_cols = [("a", 0), ("b", 1)] + [("a", j) for j in range(2, len(a_cols))] \
+        + [("b", j) for j in range(2, len(b_cols))]
+    out = R.expansion_join(a, b, a_on=[1], out_cols=out_cols,
+                           out_capacity=out_cap)
+    out = R.rel_unique(R.rel_sort(out))
+    return out.cols, out.count, out.overflow
+
+
+# ---------------------------------------------------------------------- #
+# jitted entry points (shard_map over one flat engine axis)
+# ---------------------------------------------------------------------- #
+
+
+def make_distributed_join(mesh, axis: str, n_shards: int, a_arity: int,
+                          b_arity: int, bucket_cap: int, out_cap: int):
+    """Factory: global (v,m,...) ⋈ (m,u,...) over one mesh axis.
+
+    Inputs are sharded relations: cols (n_shards, cap), counts (n_shards,).
+    Hash-repartitions both sides on the join key via all_to_all, joins
+    locally, returns sharded output cols + counts + overflow.  This is
+    Algorithm 1's level join at scale."""
+
+    def body(ac, an, bc, bn):
+        ac = tuple(c[0] for c in ac)
+        bc = tuple(c[0] for c in bc)
+        an, bn = an[0], bn[0]
+        ac, an, ovf_a = repartition(ac, an, 1, n_shards, bucket_cap, axis)
+        bc, bn, ovf_b = repartition(bc, bn, 0, n_shards, bucket_cap, axis)
+        # b arrives fully sorted from the exchange (_flatten_received) —
+        # skip the redundant build-side sort (§Perf engine iteration)
+        oc, on, ovf_j = sharded_join_local(ac, an, bc, bn, out_cap,
+                                           b_sorted=True)
+        ovf = ovf_a | ovf_b | ovf_j
+        return (tuple(c[None] for c in oc), on[None], ovf[None])
+
+    spec = P(axis)
+    out_arity = a_arity + b_arity - 2
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            tuple(spec for _ in range(a_arity)), spec,
+            tuple(spec for _ in range(b_arity)), spec,
+        ),
+        out_specs=(tuple(spec for _ in range(out_arity)), spec, spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def shard_relation(rows: np.ndarray, n_shards: int, cap: int,
+                   key_col: int = 0):
+    """Host-side: partition rows by hash(key) into (n_shards, cap, arity)
+    numpy blocks (the initial distribution of the pair table)."""
+    key = rows[:, key_col].astype(np.uint32)
+    h = key ^ np.uint32(0xB0C4)
+    h = (h ^ (h >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    h = (h ^ (h >> np.uint32(15))) * np.uint32(0x846CA68B)
+    h = h ^ (h >> np.uint32(16))
+    bucket = (h % np.uint32(n_shards)).astype(np.int64)
+    arity = rows.shape[1]
+    out = np.full((n_shards, cap, arity), R.SENTINEL, np.int32)
+    counts = np.zeros(n_shards, np.int32)
+    for b in range(n_shards):
+        rb = rows[bucket == b]
+        rb = rb[np.lexsort(tuple(rb[:, j] for j in range(arity - 1, -1, -1)))]
+        if rb.shape[0] > cap:
+            raise ValueError(f"shard {b} overflows: {rb.shape[0]} > {cap}")
+        out[b, : rb.shape[0]] = rb
+        counts[b] = rb.shape[0]
+    return out, counts
+
+
+# ---------------------------------------------------------------------- #
+# distributed conjunction query step (the paper's hot query path at scale)
+# ---------------------------------------------------------------------- #
+
+
+def make_distributed_query_step(mesh, axis: str):
+    """Returns a jitted step: (classes_a, classes_b replicated;
+    c2p shards) -> sharded result pairs of (⟦q_a⟧ ∩ ⟦q_b⟧).
+
+    Class intersection runs replicated (tiny — the paper's point);
+    materialization runs sharded: each shard scans only its own slice of
+    I_c2p, so result rows are produced where they live (zero shuffle)."""
+    spec = P(axis)
+
+    def body(ca, cb, c2p_cls, c2p_v, c2p_u, c2p_count):
+        # ca/cb replicated (full) SENTINEL-padded sorted class lists
+        c2p_cls, c2p_v, c2p_u = c2p_cls[0], c2p_v[0], c2p_u[0]
+        n = c2p_count[0]
+        ra = R.Relation((ca,), jnp.sum(ca != R.SENTINEL).astype(I32),
+                        jnp.asarray(False))
+        rb = R.Relation((cb,), jnp.sum(cb != R.SENTINEL).astype(I32),
+                        jnp.asarray(False))
+        inter = R.rel_intersect(ra, rb, 1)
+        # local materialize: my slice of c2p filtered to surviving classes
+        local = R.Relation((c2p_cls, c2p_v, c2p_u), n, jnp.asarray(False))
+        keep = R.lex_count_matches((inter.cols[0],), (c2p_cls,),
+                                   inter.count) > 0
+        out = R.rel_compact(local, keep)
+        return (out.cols[1][None], out.cols[2][None]), out.count[None]
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), spec, spec, spec, spec),
+        out_specs=((spec, spec), spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)

@@ -1,0 +1,223 @@
+"""Device query processing with CPQx — Algorithms 3 & 4 on TPU.
+
+The host plans (``core.query.plan_query``) and the device executes.  A
+plan is compiled once per (plan shape, capacity profile) — plans are
+nested tuples, hence hashable jit keys; the per-query *data* (the
+(start, len) ranges of each LOOKUP) streams in as traced scalars, so ten
+queries of the same template hit one executable.
+
+Evaluation is two-stage exactly as in the paper:
+  * class space: LOOKUP returns sorted class-id lists; CONJUNCTION is a
+    sorted intersection of class ids (Prop. 4.1); IDENTITY is a gather of
+    the cycle-purity flag (classes are cycle-pure by construction).
+  * pair space: after any JOIN the evaluator materializes s-t pairs
+    (expansion join through I_c2p) and proceeds with sorted set algebra.
+
+Every relation is capacity-padded; ``execute`` retries with doubled
+capacities on overflow (the honest dynamic->static bridge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import relational as R
+from .index import CPQxIndex, DeviceIndexArrays
+from .query import CPQ, plan_query, plan_lookup_seqs
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryCaps:
+    """Static capacities of the compiled plan (jit key)."""
+
+    class_cap: int  # class-id sets
+    pair_cap: int  # materialized pair sets
+    join_cap: int  # expansion-join outputs (pre-dedup)
+
+    def doubled(self) -> "QueryCaps":
+        return QueryCaps(self.class_cap * 2, self.pair_cap * 2, self.join_cap * 2)
+
+
+def default_caps(index: CPQxIndex) -> QueryCaps:
+    n_pairs = max(16, int(index.arrays.pair_count))
+    n_cls = max(16, int(index.arrays.n_classes))
+    p2 = 1 << (n_pairs - 1).bit_length()
+    c2 = 1 << (n_cls - 1).bit_length()
+    return QueryCaps(class_cap=c2, pair_cap=p2, join_cap=2 * p2)
+
+
+# ---------------------------------------------------------------------- #
+# device operators
+# ---------------------------------------------------------------------- #
+
+
+def _lookup_classes(a: DeviceIndexArrays, start, length, cap: int) -> R.Relation:
+    idx = jnp.arange(cap, dtype=R.I32)
+    valid = idx < length
+    src = jnp.clip(start + idx, 0, a.l2c_cls.shape[0] - 1)
+    ids = jnp.where(valid, a.l2c_cls[src], R.SENTINEL)
+    ovf = length > cap
+    return R.Relation((ids,), jnp.minimum(length, cap).astype(R.I32), ovf)
+
+
+def _materialize(a: DeviceIndexArrays, classes: R.Relation, pair_cap: int) -> R.Relation:
+    """classes -> sorted distinct (v, u).  Classes are disjoint, so the
+    expansion introduces no duplicate pairs.  The gather pass is the
+    ``expand_join`` Pallas kernel (fused binary search + payload gather)."""
+    cid = jnp.clip(classes.cols[0], 0, a.class_starts.shape[0] - 2)
+    lo = a.class_starts[cid]
+    cnt = a.class_starts[cid + 1] - lo
+    cnt = jnp.where(R.valid_mask(classes), cnt, 0).astype(R.I32)
+    ends = jnp.cumsum(cnt, dtype=R.I32)
+    total = ends[-1]
+    v, u, _ = kops.expand_join_gather(
+        ends, lo, classes.cols[0], a.c2p_v, a.c2p_u, total, pair_cap
+    )
+    rel = R.Relation((v, u), jnp.minimum(total, pair_cap).astype(R.I32),
+                     classes.overflow | (total > pair_cap))
+    return R.rel_sort(rel, num_keys=2)
+
+
+def _join_pairs(a: R.Relation, b: R.Relation, join_cap: int, pair_cap: int) -> R.Relation:
+    """(v,u) ⋈ (x,y) on u == x -> distinct (v, y).  b sorted by (x, y)."""
+    out = R.expansion_join(a, b, a_on=[1], out_cols=[("a", 0), ("b", 1)],
+                           out_capacity=join_cap)
+    out = R.rel_unique(R.rel_sort(out, num_keys=2), 2)
+    # re-embed at pair_cap
+    idx = jnp.arange(pair_cap, dtype=R.I32)
+    m = idx < out.count
+    src = jnp.clip(idx, 0, out.capacity - 1)
+    cols = tuple(jnp.where(m, c[src], R.SENTINEL) for c in out.cols)
+    return R.Relation(cols, jnp.minimum(out.count, pair_cap).astype(R.I32),
+                      out.overflow | (out.count > pair_cap))
+
+
+def _conj_id_classes(a: DeviceIndexArrays, classes: R.Relation) -> R.Relation:
+    cyc = a.class_cyclic[jnp.clip(classes.cols[0], 0, a.class_cyclic.shape[0] - 1)]
+    keep = (cyc == 1) & R.valid_mask(classes)
+    return R.rel_compact(classes, keep)
+
+
+# ---------------------------------------------------------------------- #
+# plan executor (one jit per plan shape x caps)
+# ---------------------------------------------------------------------- #
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "caps", "n_vertices"))
+def run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
+             lookup_ranges: jax.Array):
+    """Execute a physical plan.  ``lookup_ranges``: (n_lookups, 2) int32 of
+    (start, len) per LOOKUP segment, in plan order.  Returns a pair
+    Relation (sorted distinct (v, u)) and the sticky overflow flag."""
+    counter = [0]
+
+    def next_range():
+        i = counter[0]
+        counter[0] += 1
+        return lookup_ranges[i, 0], lookup_ranges[i, 1]
+
+    def as_pairs(res):
+        kind, rel = res
+        if kind == "classes":
+            return _materialize(a, rel, caps.pair_cap)
+        return rel
+
+    def ev(node):
+        kind = node[0]
+        if kind == "lookup":
+            segs = node[1]
+            start, length = next_range()
+            cur = ("classes", _lookup_classes(a, start, length, caps.class_cap))
+            for _ in segs[1:]:
+                start, length = next_range()
+                nxt = _lookup_classes(a, start, length, caps.class_cap)
+                cur = ("pairs", _join_pairs(as_pairs(cur),
+                                            _materialize(a, nxt, caps.pair_cap),
+                                            caps.join_cap, caps.pair_cap))
+            return cur
+        if kind == "identity":
+            v = jnp.arange(caps.pair_cap, dtype=R.I32)
+            m = v < n_vertices
+            col = jnp.where(m, v, R.SENTINEL)
+            return ("pairs", R.Relation((col, col),
+                                        jnp.asarray(min(n_vertices, caps.pair_cap), R.I32),
+                                        jnp.asarray(n_vertices > caps.pair_cap)))
+        if kind == "conj_id":
+            res = ev(node[1])
+            if res[0] == "classes":
+                return ("classes", _conj_id_classes(a, res[1]))
+            rel = res[1]
+            return ("pairs", R.rel_compact(rel, rel.cols[0] == rel.cols[1]))
+        left = ev(node[1])
+        right = ev(node[2])
+        if kind == "conj":
+            if left[0] == "classes" and right[0] == "classes":
+                # Prop. 4.1 on device: sorted-intersect Pallas kernel
+                lrel, rrel = left[1], right[1]
+                mask = kops.sorted_member_mask(rrel.cols[0], rrel.count,
+                                               lrel.cols[0])
+                out = R.rel_compact(lrel, mask > 0)
+                # an undersized RIGHT list means missing matches: sticky
+                out = R.Relation(out.cols, out.count,
+                                 out.overflow | rrel.overflow)
+                return ("classes", out)
+            return ("pairs", R.rel_intersect(as_pairs(left), as_pairs(right), 2))
+        if kind == "join":
+            return ("pairs", _join_pairs(as_pairs(left), as_pairs(right),
+                                         caps.join_cap, caps.pair_cap))
+        raise ValueError(kind)
+
+    res = ev(plan)
+    pairs = as_pairs(res)
+    return pairs, pairs.overflow
+
+
+# ---------------------------------------------------------------------- #
+# host driver
+# ---------------------------------------------------------------------- #
+
+
+class Engine:
+    """Query engine bound to a built index."""
+
+    def __init__(self, index: CPQxIndex):
+        self.index = index
+        self._available = index.available_seqs() if index.interests is not None else None
+
+    def plan(self, q: CPQ):
+        return plan_query(q, self.index.k, available=self._available)
+
+    def execute(self, q: CPQ, caps: QueryCaps | None = None,
+                max_retries: int = 8) -> np.ndarray:
+        """Evaluate ⟦q⟧_G; returns (n, 2) numpy array of s-t pairs."""
+        plan = self.plan(q)
+        seqs = plan_lookup_seqs(plan)
+        ranges = np.array(
+            [self.index.lookup_range(s) for s in seqs], np.int32
+        ).reshape(-1, 2)
+        ranges[:, 1] = ranges[:, 1] - ranges[:, 0]  # (start, len)
+        caps = caps or default_caps(self.index)
+        for _ in range(max_retries):
+            pairs, overflow = run_plan(
+                self.index.arrays, _freeze(plan), caps, self.index.n_vertices,
+                jnp.asarray(ranges),
+            )
+            if not bool(overflow):
+                return R.to_numpy(pairs)
+            caps = caps.doubled()
+        raise RuntimeError("query overflow not resolved after retries")
+
+
+def _freeze(plan):
+    """Plans contain lists (mutable) — freeze to nested tuples for jit."""
+    if isinstance(plan, tuple) and plan and plan[0] == "lookup":
+        return ("lookup", tuple(tuple(s) for s in plan[1]))
+    if isinstance(plan, tuple):
+        return tuple(_freeze(p) if isinstance(p, tuple) else p for p in plan)
+    return plan

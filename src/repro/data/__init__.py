@@ -1,0 +1,2 @@
+"""Data substrate: synthetic token streams, labeled-graph generators,
+fanout neighbor sampling, and behavior-sequence streams."""

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the engine's compute hot spots, each with an
+ops.py jit wrapper (+ jnp fallback) and a ref.py pure-jnp oracle:
+sorted_intersect (CONJUNCTION), expand_join (JOIN / I_c2p materialize),
+fingerprint (signature sets), segment_softmax (GNN substrate)."""

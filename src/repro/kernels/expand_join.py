@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused CSR expansion-join gather — the JOIN /
+materialization hot spot (Algorithm 4 JOIN; I_c2p expansion).
+
+Given per-probe match ranges (``lo``, inclusive-cumsum ``ends``) against a
+CSR-sorted build side, output row t belongs to probe
+``i = searchsorted(ends, t, 'right')`` at offset ``t - starts[i]``, i.e.
+build row ``lo[i] + t - starts[i]``.  XLA materializes the intermediate
+``i``/``j`` index vectors in HBM; this kernel fuses the binary search, the
+offset arithmetic and the payload gathers into one VMEM pass over the
+output tile: one HBM read per input element, one write per output row.
+
+Tiling: output rows are blocked along the grid; the probe-side ranges and
+the build-side payload columns are VMEM-resident blocks (the engine sizes
+relations to fit; beyond-VMEM sizes fall back to the jnp path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 1024
+
+
+def _expand_kernel(ends_ref, lo_ref, av_ref, bv_ref, bu_ref, total_ref,
+                   outv_ref, outu_ref, outa_ref, *, steps: int, block_t: int,
+                   sentinel: int):
+    ends = ends_ref[...]
+    lo_b = lo_ref[...]
+    av = av_ref[...]
+    bv = bv_ref[...]
+    bu = bu_ref[...]
+    total = total_ref[0]
+    n_a = ends.shape[0]
+    n_b = bv.shape[0]
+
+    t = pl.program_id(0) * block_t + jax.lax.iota(jnp.int32, block_t)
+
+    # binary search: first i with ends[i] > t  (searchsorted right)
+    loi = jnp.zeros(t.shape, jnp.int32)
+    hii = jnp.full(t.shape, n_a, jnp.int32)
+
+    def body(_, lohi):
+        l, h = lohi
+        mid = (l + h) >> 1
+        v = ends[jnp.clip(mid, 0, n_a - 1)]
+        go_right = v <= t
+        active = l < h
+        l = jnp.where(active & go_right, mid + 1, l)
+        h = jnp.where(active & (~go_right), mid, h)
+        return l, h
+
+    ai, _ = jax.lax.fori_loop(0, steps, body, (loi, hii))
+    aic = jnp.clip(ai, 0, n_a - 1)
+    # starts[i] = ends[i] - cnt[i] = ends[i-1] (exclusive cumsum)
+    starts = jnp.where(aic > 0, ends[jnp.clip(aic - 1, 0, n_a - 1)], 0)
+    bj = jnp.clip(lo_b[aic] + (t - starts), 0, n_b - 1)
+    ok = t < total
+    outv_ref[...] = jnp.where(ok, bv[bj], sentinel)
+    outu_ref[...] = jnp.where(ok, bu[bj], sentinel)
+    outa_ref[...] = jnp.where(ok, av[aic], sentinel)
+
+
+@functools.partial(jax.jit, static_argnames=("out_capacity", "block_t", "sentinel"))
+def expand_join_gather(
+    ends: jax.Array,  # (n_a,) inclusive cumsum of per-probe match counts
+    lo: jax.Array,  # (n_a,) first matching build row per probe
+    a_payload: jax.Array,  # (n_a,) probe payload column (e.g. v)
+    b_v: jax.Array,  # (n_b,) build payload columns
+    b_u: jax.Array,
+    total: jax.Array,  # scalar: true output row count
+    out_capacity: int,
+    block_t: int = DEFAULT_BLOCK_T,
+    sentinel: int = 2**31 - 1,
+):
+    """Returns (out_bv, out_bu, out_a): the expanded join projection, with
+    rows >= total set to ``sentinel``."""
+    assert out_capacity % block_t == 0, (out_capacity, block_t)
+    steps = max(1, int(ends.shape[0]).bit_length())
+    kernel = functools.partial(_expand_kernel, steps=steps, block_t=block_t,
+                               sentinel=sentinel)
+    full = lambda arr: pl.BlockSpec(arr.shape, lambda i: (0,), memory_space=pltpu.VMEM)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((out_capacity,), jnp.int32)] * 3,
+        grid=(out_capacity // block_t,),
+        in_specs=[
+            full(ends), full(lo), full(a_payload), full(b_v), full(b_u),
+            pl.BlockSpec((1,), lambda i: (0,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,), memory_space=pltpu.VMEM)
+        ] * 3,
+        interpret=jax.default_backend() == "cpu",
+    )(ends, lo, a_payload, b_v, b_u, jnp.asarray(total, jnp.int32).reshape(1))
+    return out

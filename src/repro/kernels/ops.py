@@ -1,0 +1,77 @@
+"""Jitted public wrappers for the Pallas kernels, with automatic padding
+and a jnp fallback when the problem exceeds the kernels' VMEM-resident
+assumptions (or when ``REPRO_DISABLE_PALLAS=1``).
+
+The engine calls these; tests sweep them against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import expand_join as _ej
+from . import fingerprint as _fp
+from . import ref
+from . import segment_softmax as _ss
+from . import sorted_intersect as _si
+
+SENTINEL = np.int32(2**31 - 1)
+
+# VMEM-residency ceiling for the broadcast operands (int32 words); beyond
+# this the ops fall back to the XLA path, which tiles through HBM.
+_VMEM_WORDS = 1_000_000
+
+
+def _pallas_enabled() -> bool:
+    return os.environ.get("REPRO_DISABLE_PALLAS", "0") != "1"
+
+
+def _pad_to(x: jax.Array, n: int, fill) -> jax.Array:
+    if x.shape[0] == n:
+        return x
+    pad = jnp.full((n - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def sorted_member_mask(hay, hay_count, queries, block_q: int = 1024):
+    """0/1 membership of queries in sorted hay[:hay_count]."""
+    if not _pallas_enabled() or hay.shape[0] > _VMEM_WORDS:
+        return ref.sorted_member_mask(hay, hay_count, queries)
+    n_q = queries.shape[0]
+    blk = min(block_q, max(8, 1 << (n_q - 1).bit_length()))
+    n_pad = ((n_q + blk - 1) // blk) * blk
+    q = _pad_to(queries, n_pad, SENTINEL)
+    out = _si.sorted_member_mask(hay, hay_count, q, block_q=blk)
+    return out[:n_q]
+
+
+def expand_join_gather(ends, lo, a_payload, b_v, b_u, total, out_capacity,
+                       block_t: int = 1024):
+    if (not _pallas_enabled()
+            or ends.shape[0] + 2 * b_v.shape[0] > _VMEM_WORDS):
+        return ref.expand_join_gather(ends, lo, a_payload, b_v, b_u, total,
+                                      out_capacity)
+    blk = min(block_t, max(8, 1 << (out_capacity - 1).bit_length()))
+    cap = ((out_capacity + blk - 1) // blk) * blk
+    ov, ou, oa = _ej.expand_join_gather(ends, lo, a_payload, b_v, b_u, total,
+                                        cap, block_t=blk)
+    return ov[:out_capacity], ou[:out_capacity], oa[:out_capacity]
+
+
+def fingerprint_rows(cols: tuple, salt: int = 0):
+    n = cols[0].shape[0]
+    if not _pallas_enabled():
+        return ref.fingerprint_rows(cols, salt)
+    return _fp.fingerprint_rows(tuple(cols), salt=salt)
+
+
+def segment_softmax(scores, segment_ids, num_segments, eps: float = 1e-9):
+    e = scores.shape[0]
+    if (not _pallas_enabled() or num_segments * scores.shape[1] > _VMEM_WORDS
+            or e % min(512, e) != 0):
+        return ref.segment_softmax(scores, segment_ids, num_segments, eps)
+    return _ss.segment_softmax(scores, segment_ids, num_segments, eps=eps)

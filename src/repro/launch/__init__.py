@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, per-arch step
+functions, the multi-pod dry-run, and train/serve drivers."""

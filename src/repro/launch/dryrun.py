@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run — deliverable (e).
+
+For every (architecture x input shape) cell, on the single-pod 16x16 and
+the multi-pod 2x16x16 production meshes:
+
+    lowered  = jax.jit(step, in_shardings=...).lower(*input_specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective-bytes (HLO parse)
+
+A failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system.  Results are written as JSON records
+under experiments/dryrun/ for the roofline analysis (§Roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+    python -m repro.launch.dryrun --all --mesh single --skip-existing
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "experiments/dryrun") -> dict:
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.collect import analyze_compiled
+
+    spec = get_arch(arch_id)
+    shape = spec.shape(shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "dims": {k: (list(v) if isinstance(v, tuple) else v)
+                                     for k, v in shape.dims.items()},
+        "status": "pending",
+    }
+    if shape.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = shape.skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(spec, shape, mesh)
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        rec.update(analyze_compiled(compiled, mesh))
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["description"] = cell.description
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, get_arch
+
+    cells = []
+    if args.all:
+        for aid in ARCH_IDS:
+            spec = get_arch(aid)
+            for sh in spec.shapes:
+                cells.append((aid, sh.name))
+    else:
+        if not args.arch:
+            ap.error("--arch required without --all")
+        spec = get_arch(args.arch)
+        shapes = [args.shape] if args.shape else [s.name for s in spec.shapes]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for aid, sname in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            path = os.path.join(
+                args.out, f"{aid}__{sname}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip existing] {aid} {sname} {mesh_name}")
+                continue
+            try:
+                rec = run_cell(aid, sname, multi, args.out)
+                if rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"[SKIP] {aid} {sname} {mesh_name}: "
+                          f"{rec['skip_reason'][:60]}...")
+                else:
+                    n_ok += 1
+                    print(f"[ok] {aid} {sname} {mesh_name}: "
+                          f"compile {rec['compile_s']}s, "
+                          f"{rec.get('per_device_hbm_gb', '?')} GB/dev, "
+                          f"{rec.get('total_flops', 0):.3e} flops")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                n_fail += 1
+                rec = {"arch": aid, "shape": sname, "mesh": mesh_name,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[FAIL] {aid} {sname} {mesh_name}: {e}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            # keep the JIT arena bounded across many huge compilations
+            jax.clear_caches()
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Serving driver (deliverable (b)): batched-request LM inference with
+slot-based continuous batching.
+
+A fixed pool of batch slots; each incoming request claims a slot, gets
+prefilled (padded prompt into its cache rows), then joins the shared
+one-token-per-step decode loop; finished slots are reused immediately —
+continuous batching at the step granularity, the vLLM scheduling idea
+reduced to its JAX-native static-shape core: one compiled decode_step
+serves a mixed pool of requests at different positions.
+
+Per-slot positions: every slot decodes at its own ``pos`` (the decode
+mask is per-example), so no head-of-line blocking.
+
+Local mode runs the smoke config on CPU; the production path jits the
+same step under the mesh (proved by the dry-run decode cells).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _decode_step_multi(cfg, params, cache, tokens, positions):
+    """decode_step with *per-slot* positions (B,) — the continuous
+    batching variant: each slot attends to its own prefix length."""
+    b = tokens.shape[0]
+    max_len = cache["k"].shape[2]
+    cos, sin = T.L.rope_table(cfg.head_dim, cfg.max_seq_len, cfg.rope_theta)
+    t = jnp.arange(max_len)[None, :]
+    gmask = t <= positions[:, None]
+    lmask = gmask & (t > (positions[:, None] - cfg.window))
+    masks = {"global": gmask, "local": lmask}  # (B, T) -> per-example
+    x = T._embed(cfg, params, tokens)
+    kinds = T._kind_codes(cfg)
+    pos3 = positions[:, None]
+
+    def body(x, inp):
+        lp, kind, ck, cv = inp
+        b_, s_, d_ = x.shape
+        a_in = T._norm(x, lp["attn_norm"], cfg)
+        q = (a_in @ lp["wq"]).reshape(b_, 1, cfg.n_heads, cfg.head_dim)
+        kk = (a_in @ lp["wk"]).reshape(b_, 1, cfg.n_kv_heads, cfg.head_dim)
+        vv = (a_in @ lp["wv"]).reshape(b_, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = T.L.apply_rope(q, cos, sin, pos3)
+        kk = T.L.apply_rope(kk, cos, sin, pos3)
+        # per-slot cache write at its own position: one-hot scatter-free
+        onehot = (jnp.arange(max_len)[None, :] == positions[:, None])
+        ck = jnp.where(onehot[:, :, None, None], kk.astype(ck.dtype), ck)
+        cv = jnp.where(onehot[:, :, None, None], vv.astype(cv.dtype), cv)
+        mask = jnp.where(kind == 0, masks["global"], masks["local"])
+        att = T.L.gqa_attention(q, ck, cv, mask[:, None, :].swapaxes(1, 1),
+                                scale=cfg.head_dim ** -0.5,
+                                softcap=cfg.attn_softcap)
+        att = att.reshape(b_, 1, -1) @ lp["wo"]
+        if cfg.gemma_norms:
+            att = T._norm(att, lp["post_attn_norm"], cfg)
+        x = x + att
+        m_in = T._norm(x, lp["mlp_norm"], cfg)
+        if cfg.is_moe:
+            dims = T.L.MoEDims(cfg.n_experts, cfg.top_k,
+                               T.L.moe_capacity(1, cfg.top_k, cfg.n_experts,
+                                                cfg.capacity_factor))
+            mlp, _ = T.L.moe_ffn(m_in, lp["router"], lp["w_gate"],
+                                 lp["w_up"], lp["w_down"], dims,
+                                 cfg.activation)
+        else:
+            mlp = T.L.gated_mlp(m_in, lp["w_gate"], lp["w_up"],
+                                lp["w_down"], cfg.activation)
+        if cfg.gemma_norms:
+            mlp = T._norm(mlp, lp["post_mlp_norm"], cfg)
+        x = x + mlp
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], kinds, cache["k"],
+                                cache["v"]))
+    logits = T._unembed(cfg, params, x)
+    return logits[:, 0], {"k": nk, "v": nv}
+
+
+class Server:
+    def __init__(self, cfg, params, n_slots: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = T.make_cache(cfg, n_slots, max_len)
+        self.positions = np.full(n_slots, -1, np.int64)  # -1 = free
+        self.slot_req: list = [None] * n_slots
+        self._step = jax.jit(
+            lambda p, c, t, pos: _decode_step_multi(cfg, p, c, t, pos))
+        self.steps = 0
+
+    def _free_slots(self):
+        return [i for i in range(self.n_slots) if self.positions[i] < 0]
+
+    def admit(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        # prefill: feed prompt tokens one by one through the decode step
+        # (simple + always correct; bulk prefill is the batched path the
+        # dry-run prefill cells cover)
+        self.slot_req[slot] = req
+        self.positions[slot] = 0
+        for i, tok in enumerate(req.prompt):
+            self._one_step_for(slot, tok)
+        return True
+
+    def _one_step_for(self, slot, tok):
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        toks[slot, 0] = tok
+        pos = np.maximum(self.positions, 0).astype(np.int32)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(toks),
+                                        jnp.asarray(pos))
+        self.positions[slot] += 1
+        self.steps += 1
+        return np.asarray(logits[slot])
+
+    def step_all(self):
+        """One decode step for every active slot (continuous batching)."""
+        active = [i for i in range(self.n_slots)
+                  if self.positions[i] > 0 and self.slot_req[i] is not None]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            last = req.out[-1] if req.out else req.prompt[-1]
+            toks[i, 0] = last
+        pos = np.maximum(self.positions, 0).astype(np.int32)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(toks), jnp.asarray(pos))
+        self.steps += 1
+        logits = np.asarray(logits)
+        for i in active:
+            req = self.slot_req[i]
+            nxt = int(np.argmax(logits[i]))
+            req.out.append(nxt)
+            self.positions[i] += 1
+            if len(req.out) >= req.max_new or self.positions[i] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None
+                self.positions[i] = -1  # slot free for the next request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    server = Server(cfg, params, args.slots, args.max_len)
+
+    rng = np.random.default_rng(0)
+    pending = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 8).tolist(),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    while pending or any(server.slot_req):
+        while pending and server.admit(pending[0]):
+            req = pending.pop(0)
+            print(f"[serve] admitted request {req.rid}")
+        server.step_all()
+    print(f"[serve] all {args.requests} requests done in {server.steps} steps "
+          f"with {args.slots} slots (continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules -> concrete PartitionSpecs per mesh.
+
+One rule table drives every architecture; each dimension is sharded over
+its logical axis only when the size divides the mesh axis (else
+replicated) — so the same model code lowers on the 16x16 pod, the
+2x16x16 multi-pod, and any elastic restart shape.
+
+Baseline layout (the paper-faithful / standard-megatron starting point;
+§Perf hillclimbs mutate this):
+  * batch        -> ("pod", "data")     [DP across pods and data axis]
+  * TP (heads, d_ff, vocab)   -> "model"
+  * FSDP (param d_model dims) -> "data"
+  * GNN nodes/edges, engine pair tables -> all axes flattened
+  * MoE experts  -> replicated (per-group local dispatch), expert d_ff
+    over "model"
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.transformer import LMConfig
+
+
+def _ok(size: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    else:
+        n = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    return size % n == 0
+
+
+def _spec(mesh, *dim_axis_pairs):
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    spec = []
+    for size, axis in dim_axis_pairs:
+        spec.append(axis if (axis and _ok(size, mesh, axis)) else None)
+    return P(*spec)
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------- #
+# LM
+# ---------------------------------------------------------------------- #
+
+
+def lm_param_specs(cfg: LMConfig, mesh: Mesh, fsdp: str | tuple | None = "data",
+                   embed_fsdp: bool = True) -> dict:
+    """``embed_fsdp=False`` keeps the embedding's d_model dim replicated:
+    the token gather over a (vocab x d_model)-sharded table triggers
+    GSPMD "involuntary full rematerialization" (measured: +tens of GB of
+    temp per device on train cells) — §Perf hillclimb lever."""
+    d, h, kv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_ff)
+    v, nl = cfg.padded_vocab, cfg.n_layers
+    m = "model"
+    efsdp = fsdp if embed_fsdp else None
+    layer = {
+        "attn_norm": P(None, None),
+        "wq": _spec(mesh, (nl, None), (d, fsdp), (h * hd, m)),
+        "wk": _spec(mesh, (nl, None), (d, fsdp), (kv * hd, m)),
+        "wv": _spec(mesh, (nl, None), (d, fsdp), (kv * hd, m)),
+        "wo": _spec(mesh, (nl, None), (h * hd, m), (d, fsdp)),
+        "mlp_norm": P(None, None),
+    }
+    if cfg.gemma_norms:
+        layer["post_attn_norm"] = P(None, None)
+        layer["post_mlp_norm"] = P(None, None)
+    if cfg.is_moe:
+        e = cfg.n_experts
+        layer["router"] = _spec(mesh, (nl, None), (d, fsdp), (e, None))
+        layer["w_gate"] = _spec(mesh, (nl, None), (e, None), (d, fsdp), (f, m))
+        layer["w_up"] = _spec(mesh, (nl, None), (e, None), (d, fsdp), (f, m))
+        layer["w_down"] = _spec(mesh, (nl, None), (e, None), (f, m), (d, fsdp))
+    else:
+        layer["w_gate"] = _spec(mesh, (nl, None), (d, fsdp), (f, m))
+        layer["w_up"] = _spec(mesh, (nl, None), (d, fsdp), (f, m))
+        layer["w_down"] = _spec(mesh, (nl, None), (f, m), (d, fsdp))
+    specs = {
+        "embed": _spec(mesh, (v, m), (d, efsdp)),
+        "final_norm": P(None),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = _spec(mesh, (d, efsdp), (v, m))
+    return specs
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return P(axes, None)
+
+
+def lm_cache_specs(cfg: LMConfig, mesh: Mesh) -> dict:
+    """KV cache (L, B, T, KV, hd): batch over data axes; kv heads over
+    model when divisible, else shard the *time* axis over model
+    (flash-decoding style; the combine is a psum XLA inserts)."""
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+    kv_div = _ok(cfg.n_kv_heads, mesh, "model")
+    if kv_div:
+        spec = P(None, baxes, None, "model", None)
+    else:
+        spec = P(None, baxes, "model", None, None)
+    return {"k": spec, "v": spec}
+
+
+def lm_opt_specs(param_specs: dict) -> dict:
+    """AdamW moments shard exactly like their params."""
+    import jax
+
+    from repro.train.optim import AdamWState
+
+    return AdamWState(
+        step=P(), mu=jax.tree.map(lambda s: s, param_specs),
+        nu=jax.tree.map(lambda s: s, param_specs),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# GNN — nodes/edges flattened over every axis
+# ---------------------------------------------------------------------- #
+
+
+def gnn_batch_specs(mesh: Mesh, n_nodes: int, n_edges: int) -> dict:
+    axes = tuple(mesh.axis_names)
+
+    def rowspec(n):
+        return P(axes, None) if n % mesh.devices.size == 0 else P()
+
+    def rowspec1(n):
+        return P(axes) if n % mesh.devices.size == 0 else P()
+
+    return {
+        "node_feat": rowspec(n_nodes),
+        "edge_feat": rowspec(n_edges),
+        "senders": rowspec1(n_edges),
+        "receivers": rowspec1(n_edges),
+        "node_mask": rowspec1(n_nodes),
+        "edge_mask": rowspec1(n_edges),
+        "positions": rowspec(n_nodes),
+        "graph_ids": rowspec1(n_nodes),
+    }
+
+
+def gnn_param_specs(params, mesh: Mesh) -> dict:
+    """GNN params are small: replicate (the hillclimb may TP d_hidden)."""
+    return jax.tree.map(lambda _: P(), params)
+
+
+# ---------------------------------------------------------------------- #
+# recsys
+# ---------------------------------------------------------------------- #
+
+
+def bst_param_specs(cfg, mesh: Mesh) -> dict:
+    """Embedding tables row-sharded over "model" (the big memory);
+    dense layers replicated."""
+    m = "model"
+    return {
+        "item_emb": _spec(mesh, (cfg.n_items, m), (cfg.embed_dim, None)),
+        "cat_emb": _spec(mesh, (cfg.n_cats, m), (cfg.embed_dim, None)),
+        "ctx_emb": _spec(mesh, (cfg.n_context, m), (cfg.embed_dim, None)),
+        "pos_emb": P(None, None),
+        "blocks": {
+            k: P(*([None] * nd))
+            for k, nd in [("wq", 3), ("wk", 3), ("wv", 3), ("wo", 3),
+                          ("ff1", 3), ("ff2", 3), ("ln1", 2), ("ln2", 2)]
+        },
+        "mlp": {k: P(None, None) if k.startswith("w") else P(None)
+                for k in _bst_mlp_keys(cfg)},
+    }
+
+
+def _bst_mlp_keys(cfg):
+    n = len(cfg.mlp_dims) + 1
+    return [f"w{i}" for i in range(n)] + [f"b{i}" for i in range(n)]
+
+
+def bst_batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return P(axes)

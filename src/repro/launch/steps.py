@@ -1,0 +1,452 @@
+"""Per-(architecture x input-shape) cells: the step function, abstract
+input specs (ShapeDtypeStruct — zero allocation), and the sharding trees
+that ``dryrun.py`` lowers and ``train.py``/``serve.py`` execute.
+
+Every cell is a ``Cell(fn, args, in_shardings)``; ``jax.jit(fn,
+in_shardings=...).lower(*args).compile()`` must succeed on the production
+meshes — that is deliverable (e).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeSpec
+from repro.models import gnn as G
+from repro.models import recsys as RS
+from repro.models import transformer as T
+from repro.train.optim import adamw_init, adamw_update
+from . import shardings as S
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple  # matching pytrees of NamedSharding
+    static_argnums: tuple = ()
+    donate_argnums: tuple = ()  # params/opt for train, cache for serve
+    description: str = ""
+
+
+# per-arch gradient-accumulation factor at the assigned train_4k shape —
+# sized so per-device saved activations (full remat) fit v5e HBM
+TRAIN_ACCUM = {
+    "grok-1-314b": 16,
+    "mistral-nemo-12b": 8,
+    "gemma2-2b": 4,
+    "minicpm-2b": 4,
+    "granite-moe-3b-a800m": 4,
+}
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named_tree(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------- #
+# LM cells
+# ---------------------------------------------------------------------- #
+
+
+def _lm_train_step(cfg, accum: int = 1):
+    """Train step with internal gradient accumulation: the global batch
+    splits into ``accum`` microbatches scanned sequentially (memory-flat
+    with per-layer remat), then one AdamW update."""
+
+    def lf(p, toks, labels):
+        loss, aux = T.train_loss(cfg, p, toks, labels)
+        return loss, aux
+
+    def step(params, opt_state, tokens, labels):
+        if accum == 1:
+            (loss, _), grads = jax.value_and_grad(lf, has_aux=True)(
+                params, tokens, labels)
+        else:
+            gb, seq = tokens.shape
+            mb = gb // accum
+            toks = tokens.reshape(accum, mb, seq)
+            labs = labels.reshape(accum, mb, seq)
+
+            def micro(acc, xs):
+                t, l = xs
+                (loss, _), g = jax.value_and_grad(lf, has_aux=True)(
+                    params, t, l)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0.0)), (toks, labs))
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+        new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                               lr=3e-4)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return step
+
+
+def _lm_layout_from_env(mesh):
+    """§Perf hillclimb knobs, switchable without code edits:
+    REPRO_EMBED_FSDP=0   keep embedding d_model replicated (kills the
+                         GSPMD involuntary-remat of the token gather)
+    REPRO_FSDP_AXES=pod,data   widen FSDP (param/opt sharding) axes
+    REPRO_CONTEXT_PARALLEL=1   seq/time-shard attention over "model" when
+                         n_heads doesn't divide it (else it replicates)
+    REPRO_MOE_TOKEN_TP=1 shard MoE expert-buffer capacity over "model"
+                         with F-replicated expert weights (tiny-F MoE)"""
+    import os
+
+    embed_fsdp = os.environ.get("REPRO_EMBED_FSDP", "1") == "1"
+    axes_env = os.environ.get("REPRO_FSDP_AXES", "data")
+    axes = tuple(a for a in axes_env.split(",") if a in mesh.axis_names)
+    fsdp = axes if len(axes) > 1 else (axes[0] if axes else None)
+    # context-parallel attention is default-ON: it only activates when
+    # n_heads doesn't divide the TP axis, where the baseline layout
+    # replicates attention (42.7x traffic on minicpm — §Perf iter. 1)
+    cp = os.environ.get("REPRO_CONTEXT_PARALLEL", "1") == "1"
+    moe_tp = os.environ.get("REPRO_MOE_TOKEN_TP", "0") == "1"
+    return fsdp, embed_fsdp, cp, moe_tp
+
+
+def lm_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = spec.config
+    dims = shape.dims
+    fsdp, embed_fsdp, cp, moe_tp = _lm_layout_from_env(mesh)
+    tp_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+    if cp and cfg.n_heads % tp_size != 0:
+        cfg = dataclasses.replace(cfg, attn_batch_axes=batch_axes,
+                                  attn_seq_axes=("model",))
+    if moe_tp and cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_c_axes=("model",),
+                                  attn_batch_axes=batch_axes)
+    pspecs = S.lm_param_specs(cfg, mesh, fsdp=fsdp, embed_fsdp=embed_fsdp)
+    if moe_tp and cfg.is_moe:
+        # expert weights: F replicated (full-width matmuls per shard),
+        # d_model FSDP only
+        nl, e, d, f = cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff
+        pspecs["layers"]["w_gate"] = S._spec(mesh, (nl, None), (e, None),
+                                             (d, fsdp), (f, None))
+        pspecs["layers"]["w_up"] = S._spec(mesh, (nl, None), (e, None),
+                                           (d, fsdp), (f, None))
+        pspecs["layers"]["w_down"] = S._spec(mesh, (nl, None), (e, None),
+                                             (f, None), (d, fsdp))
+    params_abs = T.abstract_params(cfg)
+    bspec = S.lm_batch_spec(mesh)
+    n_batch_axes = np.prod(
+        [dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+         for a in mesh.axis_names if a != "model"]
+    )
+
+    if shape.kind == "train":
+        gb, seq = dims["global_batch"], dims["seq_len"]
+        accum = TRAIN_ACCUM.get(spec.arch_id, 1)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        ospecs = S.lm_opt_specs(pspecs)
+        args = (
+            params_abs, opt_abs,
+            _sds((gb, seq), I32), _sds((gb, seq), I32),
+        )
+        shard = (
+            _named_tree(mesh, pspecs), _named_tree(mesh, ospecs),
+            NamedSharding(mesh, bspec), NamedSharding(mesh, bspec),
+        )
+        return Cell(spec.arch_id, shape.name, _lm_train_step(cfg, accum),
+                    args, shard, donate_argnums=(0, 1),
+                    description=f"train {gb}x{seq} accum={accum}")
+
+    b, seq = dims["global_batch"], dims["seq_len"]
+    cache_len = seq
+    cache_abs = T.abstract_cache(cfg, b, cache_len)
+    if b % n_batch_axes == 0:
+        cspecs = S.lm_cache_specs(cfg, mesh)
+        tok_spec = bspec
+    else:
+        # tiny-batch long-context: shard the KV *time* axis over the whole
+        # mesh (flash-decoding style); batch replicated
+        total = int(np.prod(mesh.devices.shape))
+        assert cache_len % total == 0, (cache_len, total)
+        cspecs = {"k": P(None, None, tuple(mesh.axis_names), None, None),
+                  "v": P(None, None, tuple(mesh.axis_names), None, None)}
+        tok_spec = P(None, None)
+
+    if shape.kind == "prefill":
+        def fn(params, tokens, cache):
+            return T.prefill(cfg, params, tokens, cache)
+
+        args = (params_abs, _sds((b, seq), I32), cache_abs)
+        shard = (_named_tree(mesh, pspecs), NamedSharding(mesh, tok_spec),
+                 _named_tree(mesh, cspecs))
+        return Cell(spec.arch_id, shape.name, fn, args, shard,
+                    donate_argnums=(2,),
+                    description=f"prefill {b}x{seq}")
+
+    if shape.kind == "decode":
+        def fn(params, cache, tokens, pos):
+            return T.decode_step(cfg, params, cache, tokens, pos)
+
+        args = (params_abs, cache_abs, _sds((b, 1), I32), _sds((), I32))
+        shard = (_named_tree(mesh, pspecs), _named_tree(mesh, cspecs),
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+        return Cell(spec.arch_id, shape.name, fn, args, shard,
+                    donate_argnums=(1,),
+                    description=f"decode b={b} kv={seq}")
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------- #
+# GNN cells
+# ---------------------------------------------------------------------- #
+
+
+def _gnn_graph_abs(mesh, n_nodes, n_edges, d_feat, d_edge, need_pos,
+                   pad_to_mesh=True):
+    total = int(np.prod(mesh.devices.shape))
+    n = _round_up(n_nodes, total) if pad_to_mesh else n_nodes
+    e = _round_up(n_edges, total) if pad_to_mesh else n_edges
+    g = G.GraphBatch(
+        node_feat=_sds((n, d_feat), F32),
+        edge_feat=_sds((e, max(d_edge, 1)), F32) if d_edge else None,
+        senders=_sds((e,), I32),
+        receivers=_sds((e,), I32),
+        node_mask=_sds((n,), jnp.bool_),
+        edge_mask=_sds((e,), jnp.bool_),
+        positions=_sds((n, 3), F32) if need_pos else None,
+        graph_ids=_sds((n,), I32),
+        n_graphs=1,
+    )
+    specs = S.gnn_batch_specs(mesh, n, e)
+    gspec = G.GraphBatch(
+        node_feat=NamedSharding(mesh, specs["node_feat"]),
+        edge_feat=(NamedSharding(mesh, specs["edge_feat"]) if d_edge else None),
+        senders=NamedSharding(mesh, specs["senders"]),
+        receivers=NamedSharding(mesh, specs["receivers"]),
+        node_mask=NamedSharding(mesh, specs["node_mask"]),
+        edge_mask=NamedSharding(mesh, specs["edge_mask"]),
+        positions=(NamedSharding(mesh, specs["positions"]) if need_pos else None),
+        graph_ids=NamedSharding(mesh, specs["graph_ids"]),
+        n_graphs=None,
+    )
+    return g, gspec, n
+
+
+def gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    dims = shape.dims
+    d_feat = dims.get("d_feat", spec.config.d_in)
+    cfg = dataclasses.replace(spec.config, d_in=d_feat)
+    need_pos = cfg.arch in ("egnn", "mace")
+
+    if shape.kind == "sampled":
+        n_nodes, n_edges = dims["pad_nodes"], dims["pad_edges"]
+    elif shape.kind == "batched_graphs":
+        n_nodes = dims["n_nodes"] * dims["batch"]
+        n_edges = dims["n_edges"] * dims["batch"]
+    else:
+        n_nodes, n_edges = dims["n_nodes"], dims["n_edges"]
+
+    g_abs, g_shard, n_pad = _gnn_graph_abs(
+        mesh, n_nodes, n_edges, d_feat, cfg.d_edge_in, need_pos)
+    params_abs = jax.eval_shape(
+        lambda k: G.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = jax.tree.map(lambda _: P(), params_abs)
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    ospecs = jax.eval_shape(adamw_init, params_abs)
+    ospecs = jax.tree.map(lambda _: P(), ospecs)
+
+    def step(params, opt_state, g, targets):
+        def lf(p):
+            return G.train_loss(cfg, p, g, targets)
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                               lr=1e-3)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    targets_abs = _sds((n_pad, cfg.d_out), F32)
+    tspec = g_shard.node_feat
+    args = (params_abs, opt_abs, g_abs, targets_abs)
+    shard = (_named_tree(mesh, pspecs), _named_tree(mesh, ospecs), g_shard,
+             tspec)
+    return Cell(spec.arch_id, shape.name, step, args, shard,
+                donate_argnums=(0, 1),
+                description=f"gnn train N={n_nodes} E={n_edges}")
+
+
+# ---------------------------------------------------------------------- #
+# recsys cells
+# ---------------------------------------------------------------------- #
+
+
+def bst_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = spec.config
+    dims = shape.dims
+    pspecs = S.bst_param_specs(cfg, mesh)
+    params_abs = jax.eval_shape(
+        lambda k: RS.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    bspec = S.bst_batch_spec(mesh)
+    f = cfg.n_context_fields
+
+    def batch_abs(b):
+        return RS.BSTBatch(
+            item_ids=_sds((b, cfg.seq_len), I32),
+            cat_ids=_sds((b, cfg.seq_len), I32),
+            ctx_ids=_sds((b * f,), I32),
+            ctx_segs=_sds((b * f,), I32),
+            labels=_sds((b,), I32),
+        )
+
+    def batch_shard(b):
+        bs = NamedSharding(mesh, bspec)
+        row2 = NamedSharding(mesh, P(bspec[0], None))
+        return RS.BSTBatch(item_ids=row2, cat_ids=row2, ctx_ids=bs,
+                           ctx_segs=bs, labels=bs)
+
+    if shape.kind == "train":
+        b = dims["batch"]
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        ospecs = jax.tree.map(lambda s: s, pspecs)
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                return RS.train_loss(cfg, p, batch)
+
+            (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                                   lr=1e-3)
+            return new_params, new_opt, {"loss": loss, **om}
+
+        opt_shard = S_opt_like(pspecs)
+        args = (params_abs, opt_abs, batch_abs(b))
+        shard = (_named_tree(mesh, pspecs), _named_tree(mesh, opt_shard),
+                 batch_shard(b))
+        return Cell(spec.arch_id, shape.name, step, args, shard,
+                    donate_argnums=(0, 1),
+                    description=f"bst train b={b}")
+
+    if shape.kind == "serve":
+        b = dims["batch"]
+
+        def fn(params, batch):
+            return RS.forward(cfg, params, batch)
+
+        args = (params_abs, batch_abs(b))
+        shard = (_named_tree(mesh, pspecs), batch_shard(b))
+        return Cell(spec.arch_id, shape.name, fn, args, shard,
+                    description=f"bst serve b={b}")
+
+    if shape.kind == "retrieval":
+        nc = _round_up(dims["n_candidates"], int(np.prod(mesh.devices.shape)))
+
+        def fn(params, item_ids, cat_ids, ctx_ids, ctx_segs, cand_ids):
+            return RS.retrieval_topk(cfg, params, item_ids, cat_ids, ctx_ids,
+                                     ctx_segs, cand_ids, k=128)
+
+        args = (params_abs, _sds((1, cfg.seq_len), I32),
+                _sds((1, cfg.seq_len), I32), _sds((f,), I32), _sds((f,), I32),
+                _sds((nc,), I32))
+        rep = NamedSharding(mesh, P())
+        cand_spec = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+        shard = (_named_tree(mesh, pspecs), rep, rep, rep, rep, cand_spec)
+        return Cell(spec.arch_id, shape.name, fn, args, shard,
+                    description=f"bst retrieval 1x{nc}")
+    raise ValueError(shape.kind)
+
+
+def S_opt_like(pspecs):
+    from repro.train.optim import AdamWState
+
+    return AdamWState(step=P(), mu=jax.tree.map(lambda s: s, pspecs),
+                      nu=jax.tree.map(lambda s: s, pspecs))
+
+
+# ---------------------------------------------------------------------- #
+# engine cells (the paper's workload at scale — bonus dry-run rows)
+# ---------------------------------------------------------------------- #
+
+
+def engine_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    from repro.core import distributed as D
+
+    dims = shape.dims
+    total = int(np.prod(mesh.devices.shape))
+    axes = tuple(mesh.axis_names)
+
+    if shape.name.startswith("build"):
+        per = dims["n_pairs"] // total
+        bucket = max(per // total * 4, 1024)
+        join = D.make_distributed_join(mesh, axes, total, 3, 3,
+                                       bucket_cap=bucket, out_cap=4 * per)
+
+        def fn(a0, a1, a2, an, b0, b1, b2, bn):
+            return join((a0, a1, a2), an, (b0, b1, b2), bn)
+
+        col = _sds((total, per), I32)
+        cnt = _sds((total,), I32)
+        args = (col, col, col, cnt, col, col, col, cnt)
+        cs = NamedSharding(mesh, P(axes, None))
+        ns = NamedSharding(mesh, P(axes))
+        shard = (cs, cs, cs, ns, cs, cs, cs, ns)
+        return Cell(spec.arch_id, shape.name, fn, args, shard,
+                    description=f"engine level join {dims['n_pairs']} pairs")
+
+    # query cell: replicated class intersect + sharded materialize
+    per = dims["n_pairs"] // total
+    step = D.make_distributed_query_step(mesh, axes)
+
+    def fn(ca, cb, c0, c1, c2, cn):
+        return step(ca, cb, c0, c1, c2, cn)
+
+    lc = dims["lookup_classes"]
+    args = (_sds((lc,), I32), _sds((lc,), I32),
+            _sds((total, per), I32), _sds((total, per), I32),
+            _sds((total, per), I32), _sds((total,), I32))
+    rep = NamedSharding(mesh, P())
+    cs = NamedSharding(mesh, P(axes, None))
+    ns = NamedSharding(mesh, P(axes))
+    shard = (rep, rep, cs, cs, cs, ns)
+    return Cell(spec.arch_id, shape.name, fn, args, shard,
+                description=f"engine conjunction query {dims['n_pairs']} pairs")
+
+
+# ---------------------------------------------------------------------- #
+# dispatch
+# ---------------------------------------------------------------------- #
+
+
+def build_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    if spec.family == "lm":
+        return lm_cell(spec, shape, mesh)
+    if spec.family == "gnn":
+        return gnn_cell(spec, shape, mesh)
+    if spec.family == "recsys":
+        return bst_cell(spec, shape, mesh)
+    if spec.family == "engine":
+        return engine_cell(spec, shape, mesh)
+    raise ValueError(spec.family)

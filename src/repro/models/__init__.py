@@ -1,0 +1,2 @@
+"""Assigned-architecture model zoo: LM transformers (dense + MoE), GNNs,
+and recsys — pure JAX pytrees with logical-axis sharding metadata."""

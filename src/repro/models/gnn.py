@@ -1,0 +1,383 @@
+"""GNN zoo: GatedGCN, EGNN, MACE (reduced-order equivariant), GraphCast —
+all message passing on the same edge-list substrate the CPQx engine uses:
+``jax.ops.segment_sum`` over (senders, receivers) int32 arrays (JAX has no
+CSR SpMM; the segment-scatter substrate IS the system, per the assignment
+notes).
+
+Batch format: a single flat ``GraphBatch`` — batched small graphs
+(``molecule`` shape) are disjoint unions with ``graph_ids``; sampled
+subgraphs (``minibatch_lg``) are padded flat graphs with masks.
+
+MACE adaptation (DESIGN.md §Arch-applicability): the higher-order
+equivariant message construction (correlation order 3) is implemented in
+*Cartesian irrep* form — l=0 scalars, l=1 vectors, l=2 traceless
+symmetric tensors — with exact E(3)-equivariant couplings (dot, cross,
+outer-traceless, tensor contraction) instead of spherical-harmonic CG
+tables: identical expressive content for l_max=2, TPU-friendly dense
+einsums instead of irregular CG index lists.  Node states carry the
+invariant channels between layers (equivariant intermediates are rebuilt
+per layer); equivariance is property-tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+class GraphBatch(NamedTuple):
+    node_feat: jax.Array  # (N, F)
+    edge_feat: Optional[jax.Array]  # (E, Fe) or None
+    senders: jax.Array  # (E,) int32
+    receivers: jax.Array  # (E,) int32
+    node_mask: jax.Array  # (N,) bool
+    edge_mask: jax.Array  # (E,) bool
+    positions: Optional[jax.Array]  # (N, 3) for EGNN / MACE
+    graph_ids: jax.Array  # (N,) int32 — disjoint-union membership
+    n_graphs: int  # static
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # gatedgcn | egnn | mace | graphcast
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_out: int
+    d_edge_in: int = 0
+    # mace
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    r_cut: float = 5.0
+    # graphcast
+    n_mlp_layers: int = 1
+    param_dtype: str = "float32"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+# ---------------------------------------------------------------------- #
+# shared pieces
+# ---------------------------------------------------------------------- #
+
+
+def _mlp_init(key, dims, dt):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": (jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32)
+                  / np.sqrt(dims[i])).astype(dt)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dt) for i in range(len(dims) - 1)
+    }
+
+
+def _mlp(p, x, n, act=jax.nn.silu, final_act=False):
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _ln(x, eps=1e-6):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps)
+
+
+def _agg(messages: jax.Array, receivers: jax.Array, n_nodes: int,
+         edge_mask: jax.Array) -> jax.Array:
+    """Masked scatter-sum of edge messages to destination nodes — the one
+    substrate op every model shares (and the engine's segment machinery)."""
+    mask = edge_mask.reshape((-1,) + (1,) * (messages.ndim - 1))
+    m = jnp.where(mask, messages, 0)
+    return jax.ops.segment_sum(m, receivers, n_nodes)
+
+
+def edge_softmax(scores: jax.Array, receivers: jax.Array, n_nodes: int):
+    """Per-destination softmax over incoming edges (GAT-style) — Pallas
+    segment_softmax kernel."""
+    return kops.segment_softmax(scores, receivers, n_nodes)
+
+
+# ---------------------------------------------------------------------- #
+# GatedGCN  [arXiv:2003.00982 benchmark config: 16L, d=70]
+# ---------------------------------------------------------------------- #
+
+
+def gatedgcn_init(cfg: GNNConfig, key) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)).astype(dt)
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + li], 6)
+        layers.append({
+            "A": lin(lk[0], d, d), "B": lin(lk[1], d, d), "C": lin(lk[2], d, d),
+            "U": lin(lk[3], d, d), "V": lin(lk[4], d, d),
+        })
+    return {
+        "embed_n": lin(ks[0], cfg.d_in, d),
+        "embed_e": lin(ks[1], max(cfg.d_edge_in, 1), d),
+        "readout": lin(ks[2], d, cfg.d_out),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+
+
+def gatedgcn_apply(cfg: GNNConfig, params: dict, g: GraphBatch) -> jax.Array:
+    h = g.node_feat.astype(cfg.dtype) @ params["embed_n"]
+    if g.edge_feat is not None:
+        e = g.edge_feat.astype(cfg.dtype) @ params["embed_e"]
+    else:
+        e = jnp.zeros((g.senders.shape[0], cfg.d_hidden), cfg.dtype)
+    n = h.shape[0]
+
+    def body(carry, lp):
+        h, e = carry
+        hs = h[g.senders]
+        hr = h[g.receivers]
+        e_new = hr @ lp["A"] + hs @ lp["B"] + e @ lp["C"]
+        e_new = e + jax.nn.silu(_ln(e_new))
+        gate = jax.nn.sigmoid(e_new)
+        num = _agg(gate * (hs @ lp["V"]), g.receivers, n, g.edge_mask)
+        den = _agg(gate, g.receivers, n, g.edge_mask)
+        h_new = h @ lp["U"] + num / (den + 1e-6)
+        h_new = h + jax.nn.silu(_ln(h_new))
+        return (h_new, e_new), None
+
+    (h, _), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return h @ params["readout"]
+
+
+# ---------------------------------------------------------------------- #
+# EGNN  [arXiv:2102.09844: 4L, d=64, E(n) equivariant]
+# ---------------------------------------------------------------------- #
+
+
+def egnn_init(cfg: GNNConfig, key) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)).astype(dt)
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[2 + li], 3)
+        layers.append({
+            "phi_e": _mlp_init(lk[0], [2 * d + 1, d, d], dt),
+            "phi_x": _mlp_init(lk[1], [d, d, 1], dt),
+            "phi_h": _mlp_init(lk[2], [2 * d, d, d], dt),
+        })
+    return {
+        "embed_n": lin(ks[0], cfg.d_in, d),
+        "readout": lin(ks[1], d, cfg.d_out),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+
+
+def egnn_apply(cfg: GNNConfig, params: dict, g: GraphBatch):
+    """Returns (node outputs (N, d_out), updated positions (N, 3))."""
+    h = g.node_feat.astype(cfg.dtype) @ params["embed_n"]
+    x = g.positions.astype(cfg.dtype)
+    n = h.shape[0]
+
+    def body(carry, lp):
+        h, x = carry
+        diff = x[g.senders] - x[g.receivers]  # (E, 3)
+        dist2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = _mlp(lp["phi_e"], jnp.concatenate(
+            [h[g.receivers], h[g.senders], dist2], -1), 2, final_act=True)
+        w = _mlp(lp["phi_x"], m, 2)  # (E, 1)
+        # normalize by degree for stability (paper's C = 1/(n-1))
+        x_agg = _agg(diff * w, g.receivers, n, g.edge_mask)
+        deg = _agg(jnp.ones_like(w), g.receivers, n, g.edge_mask)
+        x = x + x_agg / (deg + 1.0)
+        m_agg = _agg(m, g.receivers, n, g.edge_mask)
+        h = h + _mlp(lp["phi_h"], jnp.concatenate([h, m_agg], -1), 2)
+        return (h, x), None
+
+    (h, x), _ = jax.lax.scan(body, (h, x), params["layers"])
+    return h @ params["readout"], x
+
+
+# ---------------------------------------------------------------------- #
+# MACE (reduced, Cartesian irreps)  [arXiv:2206.07697: 2L, d=128,
+# l_max=2, correlation 3, n_rbf=8]
+# ---------------------------------------------------------------------- #
+
+
+def _bessel_basis(r: jax.Array, n: int, r_cut: float) -> jax.Array:
+    """(E, n) radial Bessel basis with smooth cutoff envelope."""
+    r = jnp.clip(r, 1e-4, None)
+    k = jnp.arange(1, n + 1, dtype=r.dtype) * np.pi / r_cut
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(k * r[:, None]) / r[:, None]
+    x = jnp.clip(r / r_cut, 0, 1)
+    env = 1 - 10 * x**3 + 15 * x**4 - 6 * x**5  # C2-smooth polynomial cutoff
+    return basis * env[:, None]
+
+
+def mace_init(cfg: GNNConfig, key) -> dict:
+    dt = cfg.dtype
+    c = cfg.d_hidden
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)).astype(dt)
+    layers = []
+    # invariant scalar contributions per correlation order: nu=1 (A0),
+    # nu=2 (3 couplings), nu=3 (4 couplings) => 8 scalar channels blocks
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[3 + li], 8)
+        layers.append({
+            "radial0": _mlp_init(lk[0], [cfg.n_rbf, c], dt),
+            "radial1": _mlp_init(lk[1], [cfg.n_rbf, c], dt),
+            "radial2": _mlp_init(lk[2], [cfg.n_rbf, c], dt),
+            "wsrc": lin(lk[3], c, c),
+            "path_w": (jax.random.normal(lk[4], (8, c), jnp.float32) * 0.3).astype(dt),
+            "update": _mlp_init(lk[5], [8 * c, c, c], dt),
+        })
+    return {
+        "embed_n": lin(ks[0], cfg.d_in, c),
+        "readout": _mlp_init(ks[1], [c, c, cfg.d_out], dt),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+
+
+def mace_apply(cfg: GNNConfig, params: dict, g: GraphBatch) -> jax.Array:
+    """Higher-order equivariant message passing; returns (N, d_out)."""
+    h = g.node_feat.astype(cfg.dtype) @ params["embed_n"]  # (N, C)
+    x = g.positions.astype(cfg.dtype)
+    n, c = h.shape
+    eye3 = jnp.eye(3, dtype=h.dtype)
+
+    diff = x[g.senders] - x[g.receivers]  # (E, 3)
+    r = jnp.sqrt(jnp.sum(diff * diff, -1) + 1e-12)
+    rhat = diff / r[:, None]
+    rbf = _bessel_basis(r, cfg.n_rbf, cfg.r_cut)  # (E, n_rbf)
+    # Cartesian "spherical harmonics": Y1 = rhat, Y2 = rhat rhat^T - I/3
+    y1 = rhat  # (E, 3)
+    y2 = rhat[:, :, None] * rhat[:, None, :] - eye3 / 3.0  # (E, 3, 3)
+
+    def body(h, lp):
+        hs = (h @ lp["wsrc"])[g.senders]  # (E, C)
+        r0 = _mlp(lp["radial0"], rbf, 1)  # (E, C)
+        r1 = _mlp(lp["radial1"], rbf, 1)
+        r2 = _mlp(lp["radial2"], rbf, 1)
+        # atomic basis A (density trick): sum over neighbors
+        a0 = _agg(r0 * hs, g.receivers, n, g.edge_mask)  # (N, C)
+        a1 = _agg((r1 * hs)[:, :, None] * y1[:, None, :], g.receivers, n,
+                  g.edge_mask)  # (N, C, 3)
+        a2 = _agg((r2 * hs)[:, :, None, None] * y2[:, None, :, :], g.receivers,
+                  n, g.edge_mask)  # (N, C, 3, 3)
+
+        # ---- higher-order invariants via exact Cartesian couplings ----- #
+        # nu=1
+        b1 = a0
+        # nu=2: A0*A0, A1.A1, A2:A2
+        b2a = a0 * a0
+        b2b = jnp.einsum("nci,nci->nc", a1, a1)
+        b2c = jnp.einsum("ncij,ncij->nc", a2, a2)
+        # nu=3: A0*A1.A1, A1.(A2@A1), A0*A2:A2, det-like tr(A2@A2@A2)
+        a2a1 = jnp.einsum("ncij,ncj->nci", a2, a1)
+        b3a = a0 * b2b
+        b3b = jnp.einsum("nci,nci->nc", a1, a2a1)
+        b3c = a0 * b2c
+        b3d = jnp.einsum("ncij,ncjk,ncki->nc", a2, a2, a2)
+        feats = jnp.stack([b1, b2a, b2b, b2c, b3a, b3b, b3c, b3d], 1)  # (N,8,C)
+        feats = feats * lp["path_w"][None]  # learnable path weights
+        m = _mlp(lp["update"], feats.reshape(n, 8 * c), 2)
+        return h + m, None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    out = _mlp(params["readout"], h, 2)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# GraphCast-style encode-process-decode  [arXiv:2212.12794: 16L, d=512]
+# ---------------------------------------------------------------------- #
+
+
+def graphcast_init(cfg: GNNConfig, key) -> dict:
+    dt = cfg.dtype
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + li], 2)
+        layers.append({
+            "edge_mlp": _mlp_init(lk[0], [3 * d, d, d], dt),
+            "node_mlp": _mlp_init(lk[1], [2 * d, d, d], dt),
+        })
+    return {
+        "enc_n": _mlp_init(ks[0], [cfg.d_in, d, d], dt),
+        "enc_e": _mlp_init(ks[1], [max(cfg.d_edge_in, 1), d, d], dt),
+        "dec": _mlp_init(ks[2], [d, d, cfg.d_out], dt),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+    }
+
+
+def graphcast_apply(cfg: GNNConfig, params: dict, g: GraphBatch) -> jax.Array:
+    h = _mlp(params["enc_n"], g.node_feat.astype(cfg.dtype), 2)
+    if g.edge_feat is not None:
+        e = _mlp(params["enc_e"], g.edge_feat.astype(cfg.dtype), 2)
+    else:
+        e = jnp.zeros((g.senders.shape[0], cfg.d_hidden), cfg.dtype)
+    n = h.shape[0]
+
+    def body(carry, lp):
+        h, e = carry
+        e_in = jnp.concatenate([e, h[g.senders], h[g.receivers]], -1)
+        e = e + _mlp(lp["edge_mlp"], e_in, 2)
+        agg = _agg(e, g.receivers, n, g.edge_mask)
+        h = h + _mlp(lp["node_mlp"], jnp.concatenate([h, agg], -1), 2)
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return _mlp(params["dec"], h, 2)
+
+
+# ---------------------------------------------------------------------- #
+# dispatch
+# ---------------------------------------------------------------------- #
+
+INIT = {"gatedgcn": gatedgcn_init, "egnn": egnn_init, "mace": mace_init,
+        "graphcast": graphcast_init}
+
+
+def init_params(cfg: GNNConfig, key) -> dict:
+    return INIT[cfg.arch](cfg, key)
+
+
+def apply(cfg: GNNConfig, params: dict, g: GraphBatch) -> jax.Array:
+    if cfg.arch == "gatedgcn":
+        return gatedgcn_apply(cfg, params, g)
+    if cfg.arch == "egnn":
+        return egnn_apply(cfg, params, g)[0]
+    if cfg.arch == "mace":
+        return mace_apply(cfg, params, g)
+    if cfg.arch == "graphcast":
+        return graphcast_apply(cfg, params, g)
+    raise ValueError(cfg.arch)
+
+
+def train_loss(cfg: GNNConfig, params: dict, g: GraphBatch,
+               targets: jax.Array):
+    """Masked regression loss (graph tasks are regression/classif-agnostic
+    for the substrate; benchmarks use squared error)."""
+    out = apply(cfg, params, g)
+    err = jnp.where(g.node_mask[:, None], out - targets, 0.0)
+    loss = jnp.sum(err * err) / jnp.maximum(jnp.sum(g.node_mask), 1)
+    return loss.astype(jnp.float32), {"mse": loss}

@@ -1,0 +1,315 @@
+"""Shared LM building blocks: norms, RoPE, GQA attention (full / sliding /
+softcap), gated MLPs, and sort-based top-k MoE dispatch.
+
+Conventions
+-----------
+* Params are plain nested dicts of jnp arrays; layer-stacked weights carry
+  a leading ``n_layers`` axis and the forward pass scans over it (compact
+  HLO — essential for the 512-device dry-run compile).
+* Every function is shape-polymorphic over batch; dtype policy: params in
+  ``cfg.param_dtype`` (bf16 default), accumulation in f32 where it
+  matters (softmax, norms, router).
+* Sharding is *not* baked in here: launch/shardings.py assigns
+  PartitionSpecs to the same tree structure by logical name.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------- #
+# norms
+# ---------------------------------------------------------------------- #
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float,
+             gemma_style: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    out = xf * (1.0 + w) if gemma_style else xf * w
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# rotary position embedding
+# ---------------------------------------------------------------------- #
+
+
+def rope_table(head_dim: int, max_len: int, theta: float) -> tuple:
+    """(cos, sin) tables of shape (max_len, head_dim // 2), f32."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_len)
+    freqs = np.outer(t, inv)
+    return jnp.asarray(np.cos(freqs), jnp.float32), jnp.asarray(
+        np.sin(freqs), jnp.float32
+    )
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               positions: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    c = cos[positions][..., None, :]  # (..., S, 1, D/2)
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# attention
+# ---------------------------------------------------------------------- #
+
+
+def _softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def causal_mask(s_q: int, s_kv: int, window: Optional[int] = None,
+                q_offset: int = 0) -> jax.Array:
+    """(s_q, s_kv) bool mask.  ``window``: sliding-window width (local
+    attention); ``q_offset``: absolute position of query row 0."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_kv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, D)
+    mask: jax.Array,  # broadcastable to (B, H, S, T) — bool
+    scale: float,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Grouped-query attention; f32 softmax accumulation."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+    neg = jnp.finfo(jnp.float32).min
+    if mask.ndim == 2:  # (S, T) shared across batch/heads
+        m = mask[None, None, None]
+    elif mask.ndim == 3:  # (B, S, T) per-example (e.g. decode lengths)
+        m = mask[:, None, None]
+    else:
+        raise ValueError(f"mask ndim {mask.ndim} unsupported")
+    logits = jnp.where(m, logits, neg)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, h, d)
+
+
+def chunked_gqa_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, D)
+    qpos: jax.Array,  # (S,) absolute query positions
+    kpos: jax.Array,  # (T,) absolute key positions
+    window: jax.Array,  # traced scalar: window size (> T means global)
+    scale: float,
+    softcap: Optional[float],
+    q_chunk: int,
+) -> jax.Array:
+    """Query-chunked attention for long sequences (32k+ prefill): scans
+    over S/q_chunk query blocks so the logits working set is
+    (B, H, q_chunk, T) instead of (B, H, S, T) — the O(S·T) mask is never
+    materialized either (membership computed from positions per block).
+    Numerics identical to gqa_attention (masked f32 softmax)."""
+    b, s, h, d = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    assert s % q_chunk == 0, (s, q_chunk)
+    qg = q.reshape(b, s, kv, g, d)
+    neg = jnp.finfo(jnp.float32).min
+
+    def body(_, i):
+        qs = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, i * q_chunk, q_chunk, axis=0)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qs, k).astype(jnp.float32)
+        logits = _softcap(logits * scale, softcap)
+        mask = (kpos[None, :] <= qp[:, None]) & (kpos[None, :] > qp[:, None] - window)
+        logits = jnp.where(mask[None, None, None], logits, neg)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+        return None, out.reshape(b, q_chunk, h, d)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(s // q_chunk))
+    # (nq, B, qc, H, D) -> (B, S, H, D)
+    return jnp.moveaxis(chunks, 0, 1).reshape(b, s, h, d)
+
+
+# ---------------------------------------------------------------------- #
+# gated MLP
+# ---------------------------------------------------------------------- #
+
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": lambda t: jax.nn.gelu(t, approximate=True)}[
+        activation
+    ]
+    h = act(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------- #
+# sort-based top-k MoE (dropping, GShard-equivalent capacity semantics)
+# ---------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    capacity: int  # per expert per group (static)
+
+
+def moe_capacity(tokens_per_group: int, top_k: int, n_experts: int,
+                 capacity_factor: float) -> int:
+    c = int(np.ceil(tokens_per_group * top_k * capacity_factor / n_experts))
+    return max(1, c)
+
+
+def _topk_gates(probs: jax.Array, k: int):
+    """Iterative top-k (argmax + mask, k small) — differentiable through
+    the one-hot·probs product.  Replaces ``lax.top_k``, whose JVP (like
+    batched sort's) builds gathers with operand_batching_dims that the
+    SPMD partitioner cannot handle."""
+    e = probs.shape[-1]
+    p = probs
+    gis, gvs = [], []
+    for _ in range(k):
+        gi = jnp.argmax(p, axis=-1)
+        onehot = jax.nn.one_hot(gi, e, dtype=probs.dtype)
+        gvs.append(jnp.sum(probs * onehot, axis=-1))
+        gis.append(gi.astype(jnp.int32))
+        p = p * (1 - onehot) - onehot  # never re-picked
+    return jnp.stack(gvs, -1), jnp.stack(gis, -1)
+
+
+def moe_ffn(
+    x: jax.Array,  # (G, S, D) tokens, G = data-sharded groups
+    router_w: jax.Array,  # (D, E)
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    dims: MoEDims,
+    activation: str = "silu",
+    c_axes: tuple = (),  # token-TP: shard the capacity dim over these axes
+    batch_axes: tuple = (),
+):
+    """Token-dropping top-k MoE with group-local dispatch.
+
+    TPU-native dispatch (DESIGN.md §2): instead of GShard's (S, E, C)
+    one-hot dispatch einsum (S·E·C·D FLOPs of pure bookkeeping), the
+    (group, expert) assignments are ordered by ONE flat integer-only
+    stable sort on the composite key ``group*E + expert`` (group-major =>
+    each group's segment stays contiguous, so the G axis still shards
+    over "data"), and the (G, E, C, D) expert buffers are built with
+    *gathers only* — position-in-expert falls out of the sorted order; no
+    scatter, no batched-gather dims (GSPMD-hostile), and gradients flow
+    through gathers and the one-hot gate product, never through a sort.
+
+    Returns (y (G, S, D), aux) with the load-balancing loss.
+    """
+    g, s, d = x.shape
+    e, k, c = dims.n_experts, dims.top_k, dims.capacity
+    n = g * s * k  # total routed assignments
+    dt = x.dtype
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = _topk_gates(probs, k)  # (G,S,k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- flat assignment lists ------------------------------------------ #
+    flat_e = expert_idx.reshape(n)  # (N,)
+    g_of = jnp.arange(n, dtype=jnp.int32) // (s * k)
+    tok_global = g_of * s + (jnp.arange(n, dtype=jnp.int32) % (s * k)) // k
+    flat_gate = gate_vals.reshape(n)
+    kcomp = g_of * e + flat_e  # group-major composite key, in [0, G*E)
+
+    # ONE flat integer sort (ints only => no sort-JVP under grad)
+    skey, sidx = jax.lax.sort(
+        (kcomp, jnp.arange(n, dtype=jnp.int32)), num_keys=1, is_stable=True
+    )
+    # per-(group, expert) segment sizes and exclusive offsets
+    sizes = jax.ops.segment_sum(jnp.ones(n, jnp.int32), kcomp, g * e)  # (G*E,)
+    offs = jnp.cumsum(sizes) - sizes
+
+    # ---- expert buffers via pure gather ---------------------------------- #
+    # buffer row r = (group gg, expert ee, slot p)
+    r = jnp.arange(g * e * c, dtype=jnp.int32)
+    ge = r // c
+    p = r % c
+    src = jnp.take(offs, ge, 0) + p
+    valid = p < jnp.take(sizes, ge, 0)
+    srcc = jnp.clip(src, 0, n - 1)
+    assign = jnp.take(sidx, srcc, 0)  # original assignment index
+    tok = jnp.take(tok_global, assign, 0)  # global token id (G*S)
+    xb = jnp.take(x.reshape(g * s, d), tok, axis=0)  # (G*E*C, D)
+    xb = jnp.where(valid[:, None], xb, 0).reshape(g, e, c, d)
+    if c_axes:
+        # token-TP for tiny-expert MoE (granite): shard the capacity dim
+        # over "model" with expert weights F-replicated — expert matmuls
+        # run full-width per shard, no contraction psums (the baseline
+        # F-sharded layout all-reduces (G,E,C,D) per layer)
+        from jax.sharding import PartitionSpec as _P
+
+        xb = jax.lax.with_sharding_constraint(
+            xb, _P(batch_axes or None, None, c_axes, None))
+
+    # ---- expert computation (the only real FLOPs) ------------------------ #
+    act = {"silu": jax.nn.silu, "gelu": lambda t: jax.nn.gelu(t, approximate=True)}[
+        activation
+    ]
+    hg = jnp.einsum("gecd,edf->gecf", xb, w_gate.astype(dt))
+    hu = jnp.einsum("gecd,edf->gecf", xb, w_up.astype(dt))
+    yb = jnp.einsum("gecf,efd->gecd", act(hg) * hu, w_down.astype(dt))
+    yb = yb.reshape(g * e * c, d)
+
+    # ---- combine: flat segment-sum back to tokens ------------------------- #
+    gates_b = jnp.take(flat_gate, assign, 0)  # (G*E*C,)
+    contrib = yb * (gates_b * valid.astype(jnp.float32)).astype(dt)[:, None]
+    seg = jnp.where(valid, tok, g * s)  # dropped -> trash segment
+    y = jax.ops.segment_sum(contrib, seg, g * s + 1)[: g * s].reshape(g, s, d)
+
+    # ---- aux: load-balancing loss (Switch-style) ------------------------ #
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux_loss = e * jnp.sum(me * ce)
+    kept = jnp.sum(valid.astype(jnp.float32))  # routed assignments kept
+    dropped = 1.0 - kept / (g * s * k)
+    return y.astype(dt), {"moe_aux_loss": aux_loss,
+                          "moe_dropped_frac": dropped}
+
+
+# ---------------------------------------------------------------------- #
+# init helpers
+# ---------------------------------------------------------------------- #
+
+
+def normal_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)

@@ -1,0 +1,203 @@
+"""BST — Behavior Sequence Transformer (Alibaba) [arXiv:1905.06874].
+
+    item/category embeddings + learned positions over a length-20 behavior
+    sequence (target item appended) -> 1 transformer block (8 heads)
+    -> concat with user/context EmbeddingBag features -> MLP 1024-512-256
+    -> logit.
+
+JAX has no ``nn.EmbeddingBag``: multi-hot context features are reduced
+with ``jnp.take`` + ``jax.ops.segment_sum`` — that lookup-reduce IS the
+hot path at recsys batch sizes, so it is implemented here as part of the
+system (see kernel_taxonomy §RecSys), not stubbed.
+
+Shapes (assigned):
+    train_batch   B=65,536 train_step
+    serve_p99     B=512    serve_step
+    serve_bulk    B=262,144 serve_step
+    retrieval_cand B=1, 1M candidates: two-stage scoring — sequence tower
+    runs once, candidate embeddings scored with a batched dot + MLP-lite
+    head (no per-candidate transformer), then distributed top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 4_000_000  # sparse table rows (Alibaba-scale surrogate)
+    n_cats: int = 100_000
+    n_context: int = 1_000_000  # multi-hot context vocab (user profile etc.)
+    embed_dim: int = 32
+    seq_len: int = 20  # behavior sequence incl. target slot
+    n_heads: int = 8
+    n_blocks: int = 1
+    d_ff: int = 128
+    mlp_dims: tuple = (1024, 512, 256)
+    n_context_fields: int = 8  # avg multi-hot ids per example
+    param_dtype: str = "float32"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+class BSTBatch(NamedTuple):
+    """One ranking batch.
+
+    item_ids   (B, S)  behavior sequence, target at slot S-1
+    cat_ids    (B, S)
+    ctx_ids    (B*F,)  flattened multi-hot context ids
+    ctx_segs   (B*F,)  example id per context id (EmbeddingBag segments)
+    labels     (B,)    click labels (train only)
+    """
+
+    item_ids: jax.Array
+    cat_ids: jax.Array
+    ctx_ids: jax.Array
+    ctx_segs: jax.Array
+    labels: jax.Array
+
+
+def init_params(cfg: BSTConfig, key) -> dict:
+    dt = cfg.dtype
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 16)
+
+    def emb(k, n, dim):
+        return (jax.random.normal(k, (n, dim), jnp.float32) * 0.01).astype(dt)
+
+    def lin(k, i, o):
+        return (jax.random.normal(k, (i, o), jnp.float32) / np.sqrt(i)).astype(dt)
+
+    dm = 2 * d  # item ⊕ category per position
+    blocks = []
+    for bi in range(cfg.n_blocks):
+        bk = jax.random.split(ks[6 + bi], 8)
+        blocks.append({
+            "wq": lin(bk[0], dm, dm), "wk": lin(bk[1], dm, dm),
+            "wv": lin(bk[2], dm, dm), "wo": lin(bk[3], dm, dm),
+            "ff1": lin(bk[4], dm, cfg.d_ff), "ff2": lin(bk[5], cfg.d_ff, dm),
+            "ln1": jnp.ones((dm,), dt), "ln2": jnp.ones((dm,), dt),
+        })
+    mlp_in = cfg.seq_len * dm + d  # flattened sequence + context bag
+    dims = (mlp_in,) + cfg.mlp_dims + (1,)
+    mlp = {
+        f"w{i}": lin(jax.random.fold_in(ks[5], i), dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), dt) for i in range(len(dims) - 1)}
+    return {
+        "item_emb": emb(ks[0], cfg.n_items, d),
+        "cat_emb": emb(ks[1], cfg.n_cats, d),
+        "ctx_emb": emb(ks[2], cfg.n_context, d),
+        "pos_emb": emb(ks[3], cfg.seq_len, dm),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "mlp": mlp,
+    }
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, segs: jax.Array,
+                  n_segments: int, mode: str = "sum") -> jax.Array:
+    """EmbeddingBag via take + segment_sum (the JAX-native lowering)."""
+    rows = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(rows, segs, n_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype), segs,
+                                  n_segments)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def _ln(x, w, eps=1e-6):
+    m = jnp.mean(x, -1, keepdims=True)
+    v = jnp.var(x, -1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps) * w
+
+
+def _transformer_block(bp, x, n_heads):
+    b, s, dm = x.shape
+    hd = dm // n_heads
+    h = _ln(x, bp["ln1"])
+    q = (h @ bp["wq"]).reshape(b, s, n_heads, hd)
+    k = (h @ bp["wk"]).reshape(b, s, n_heads, hd)
+    v = (h @ bp["wv"]).reshape(b, s, n_heads, hd)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(hd)
+    p = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(x.dtype)
+    att = jnp.einsum("bhst,bthd->bshd", p, v).reshape(b, s, dm)
+    x = x + att @ bp["wo"]
+    h = _ln(x, bp["ln2"])
+    x = x + jax.nn.leaky_relu(h @ bp["ff1"]) @ bp["ff2"]
+    return x
+
+
+def sequence_tower(cfg: BSTConfig, params: dict, item_ids, cat_ids):
+    """(B, S) ids -> (B, S*2d) transformer-encoded sequence features."""
+    e = jnp.concatenate(
+        [jnp.take(params["item_emb"], item_ids, 0),
+         jnp.take(params["cat_emb"], cat_ids, 0)], -1)  # (B,S,2d)
+    x = e + params["pos_emb"][None]
+
+    def body(x, bp):
+        return _transformer_block(bp, x, cfg.n_heads), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    b = x.shape[0]
+    return x.reshape(b, -1)
+
+
+def forward(cfg: BSTConfig, params: dict, batch: BSTBatch) -> jax.Array:
+    """CTR logits (B,)."""
+    b = batch.item_ids.shape[0]
+    seq = sequence_tower(cfg, params, batch.item_ids, batch.cat_ids)
+    ctx = embedding_bag(params["ctx_emb"], batch.ctx_ids, batch.ctx_segs, b)
+    x = jnp.concatenate([seq, ctx], -1)
+    n = len(cfg.mlp_dims) + 1
+    for i in range(n):
+        x = x @ params["mlp"][f"w{i}"] + params["mlp"][f"b{i}"]
+        if i < n - 1:
+            x = jax.nn.leaky_relu(x)
+    return x[:, 0].astype(jnp.float32)
+
+
+def train_loss(cfg: BSTConfig, params: dict, batch: BSTBatch):
+    logits = forward(cfg, params, batch)
+    y = batch.labels.astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"bce": loss}
+
+
+# ---------------------------------------------------------------------- #
+# retrieval: score 1M candidates for one user — batched dot, not a loop
+# ---------------------------------------------------------------------- #
+
+
+def retrieval_scores(cfg: BSTConfig, params: dict, item_ids, cat_ids,
+                     ctx_ids, ctx_segs, cand_ids) -> jax.Array:
+    """(n_cand,) scores: user tower output dotted with candidate item
+    embeddings (two-tower approximation of BST scoring for retrieval;
+    the full MLP head reranks the top-k downstream)."""
+    seq = sequence_tower(cfg, params, item_ids, cat_ids)  # (1, S*2d)
+    ctx = embedding_bag(params["ctx_emb"], ctx_ids, ctx_segs, 1)  # (1, d)
+    user = jnp.concatenate([seq, ctx], -1)  # (1, D)
+    # project user to embed_dim with the first MLP layer slice (cheap head)
+    w = params["mlp"]["w0"][:, : cfg.embed_dim]  # (D, d)
+    u = jax.nn.tanh(user @ w)  # (1, d)
+    cand = jnp.take(params["item_emb"], cand_ids, 0)  # (n_cand, d)
+    return (cand @ u[0]).astype(jnp.float32)
+
+
+def retrieval_topk(cfg: BSTConfig, params: dict, item_ids, cat_ids, ctx_ids,
+                   ctx_segs, cand_ids, k: int = 100):
+    scores = retrieval_scores(cfg, params, item_ids, cat_ids, ctx_ids,
+                              ctx_segs, cand_ids)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, jnp.take(cand_ids, idx, 0)

@@ -1,0 +1,413 @@
+"""Decoder-only LM supporting all five assigned architectures:
+
+  grok-1-314b        MoE 8e top-2, GQA kv=8
+  granite-moe-3b     MoE 40e top-8, tiny per-expert FFN
+  gemma2-2b          dense, alternating local/global attention, softcaps,
+                     GeGLU, sandwich norms, gemma-style RMSNorm
+  minicpm-2b         dense llama-like with muP-style embed/residual scaling
+  mistral-nemo-12b   dense, head_dim 128 != d_model/n_heads, 128k rope
+
+One config dataclass drives everything; layers are stacked and scanned so
+the 512-device dry-run compiles in seconds, not hours.
+
+Entry points:
+  init_params(cfg, key)                     parameter pytree
+  train_loss(cfg, params, tokens, labels)   next-token CE loss (f32)
+  prefill(cfg, params, tokens)              logits + KV cache
+  decode_step(cfg, params, cache, tok, pos) one-token serve step
+  abstract_params(cfg)                      ShapeDtypeStruct tree (dry-run)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # attention flavor
+    attn_pattern: tuple = ("global",)  # cycled over layers
+    window: int = 4096
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    rope_theta: float = 10_000.0
+    # norm / activation / scaling
+    activation: str = "silu"
+    gemma_norms: bool = False  # (1+w) RMSNorm + sandwich (post) norms
+    embed_scale: Optional[float] = None  # e.g. sqrt(d_model) (gemma), 12 (minicpm)
+    residual_scale: Optional[float] = None  # minicpm depth scaling
+    logit_scale: Optional[float] = None  # minicpm: d_model/dim_model_base
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    max_seq_len: int = 131_072
+    # vocab padded for TP divisibility (logical vocab_size preserved)
+    vocab_pad_to: int = 256
+    # memory policy: remat the layer scan (training); q-chunked attention
+    # for sequences >= 2*q_chunk (long prefill) — 0 disables
+    remat: bool = False
+    q_chunk: int = 0
+    # context-parallel attention hints (set by the launcher when n_heads
+    # does not divide the TP axis — otherwise attention math replicates
+    # over "model", measured 16x redundant traffic on minicpm/gemma2):
+    # full path shards the QUERY seq dim; chunked path shards the KV time
+    # dim.  Empty tuples disable.
+    attn_batch_axes: tuple = ()
+    attn_seq_axes: tuple = ()
+    moe_c_axes: tuple = ()  # MoE expert-buffer capacity-dim sharding (TP)
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab_size + p - 1) // p) * p
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_kind(self, i: int) -> str:
+        return self.attn_pattern[i % len(self.attn_pattern)]
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        """Exact parameter count (excluding vocab padding)."""
+        d, h, kv, hd, f, v = (self.d_model, self.n_heads, self.n_kv_heads,
+                              self.head_dim, self.d_ff, self.vocab_size)
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        norms = 2 * d + (2 * d if self.gemma_norms else 0)
+        per_layer = attn + ffn + norms
+        head = 0 if self.tie_embeddings else d * v
+        return self.n_layers * per_layer + v * d + d + head
+
+
+# ---------------------------------------------------------------------- #
+# parameters
+# ---------------------------------------------------------------------- #
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> dict:
+    dt = cfg.dtype
+    d, h, kv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_ff)
+    nl, v = cfg.n_layers, cfg.padded_vocab
+    ks = jax.random.split(key, 16)
+    depth_scale = 1.0 / np.sqrt(2 * nl)
+
+    def stack(k, shape, scale=1.0):
+        return L.normal_init(k, (nl,) + shape, dt, scale)
+
+    layer = {
+        "attn_norm": jnp.ones((nl, d), dt) * (0.0 if cfg.gemma_norms else 1.0),
+        "wq": stack(ks[0], (d, h * hd)),
+        "wk": stack(ks[1], (d, kv * hd)),
+        "wv": stack(ks[2], (d, kv * hd)),
+        "wo": stack(ks[3], (h * hd, d), depth_scale),
+        "mlp_norm": jnp.ones((nl, d), dt) * (0.0 if cfg.gemma_norms else 1.0),
+    }
+    if cfg.gemma_norms:
+        layer["post_attn_norm"] = jnp.zeros((nl, d), dt)
+        layer["post_mlp_norm"] = jnp.zeros((nl, d), dt)
+    if cfg.is_moe:
+        e = cfg.n_experts
+        layer["router"] = stack(ks[4], (d, e))
+        layer["w_gate"] = stack(ks[5], (e, d, f))
+        layer["w_up"] = stack(ks[6], (e, d, f))
+        layer["w_down"] = stack(ks[7], (e, f, d), depth_scale)
+    else:
+        layer["w_gate"] = stack(ks[5], (d, f))
+        layer["w_up"] = stack(ks[6], (d, f))
+        layer["w_down"] = stack(ks[7], (f, d), depth_scale)
+
+    params = {
+        "embed": L.normal_init(ks[8], (v, d), dt),
+        "final_norm": jnp.ones((d,), dt) * (0.0 if cfg.gemma_norms else 1.0),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.normal_init(ks[9], (d, v), dt)
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> dict:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------- #
+# forward
+# ---------------------------------------------------------------------- #
+
+
+def _norm(x, w, cfg):
+    return L.rms_norm(x, w, cfg.norm_eps, gemma_style=cfg.gemma_norms)
+
+
+def _layer_masks(cfg: LMConfig, s_q: int, s_kv: int, q_offset: int = 0):
+    """One mask per attention kind used by the pattern."""
+    kinds = sorted(set(cfg.attn_pattern))
+    masks = {}
+    for kd in kinds:
+        win = cfg.window if kd == "local" else None
+        masks[kd] = L.causal_mask(s_q, s_kv, window=win, q_offset=q_offset)
+    return masks
+
+
+def _block(cfg: LMConfig, x, lp, kind_code, masks, cos, sin, positions,
+           cache_kv=None, cache_pos=None):
+    """One transformer block.  ``kind_code``: 0 global / 1 local (traced
+    scalar from the scanned layer index).  Returns (x, new_cache_kv)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+
+    a_in = _norm(x, lp["attn_norm"], cfg)
+    q = (a_in @ lp["wq"]).reshape(b, s, h, hd)
+    kk = (a_in @ lp["wk"]).reshape(b, s, kv, hd)
+    vv = (a_in @ lp["wv"]).reshape(b, s, kv, hd)
+    q = L.apply_rope(q, cos, sin, positions)
+    kk = L.apply_rope(kk, cos, sin, positions)
+
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        k_att, v_att = ck, cv
+        new_cache = (ck, cv)
+    else:
+        k_att, v_att = kk, vv
+        new_cache = None
+
+    t_kv = k_att.shape[1]
+    from jax.sharding import PartitionSpec as _P
+
+    if cfg.q_chunk and s >= 2 * cfg.q_chunk:
+        # long-sequence path: never materialize the (S, T) mask or logits
+        if cfg.attn_seq_axes:
+            # context parallelism: shard the KV time dim over TP so the
+            # per-chunk logits shard instead of replicating
+            kv_spec = _P(cfg.attn_batch_axes or None, cfg.attn_seq_axes,
+                         None, None)
+            k_att = jax.lax.with_sharding_constraint(k_att, kv_spec)
+            v_att = jax.lax.with_sharding_constraint(v_att, kv_spec)
+        qpos = positions.reshape(-1)[:s] if positions.shape[-1] == s else (
+            jnp.arange(s, dtype=jnp.int32))
+        kpos = jnp.arange(t_kv, dtype=jnp.int32)
+        window = jnp.where(kind_code == 0, jnp.int32(t_kv + 1),
+                           jnp.int32(cfg.window))
+        att = L.chunked_gqa_attention(q, k_att, v_att, qpos, kpos, window,
+                                      scale=hd ** -0.5,
+                                      softcap=cfg.attn_softcap,
+                                      q_chunk=cfg.q_chunk)
+    else:
+        if cfg.attn_seq_axes and s > 1:
+            # context parallelism: shard the QUERY seq dim over TP
+            q = jax.lax.with_sharding_constraint(
+                q, _P(cfg.attn_batch_axes or None, cfg.attn_seq_axes,
+                      None, None))
+        mask = jnp.where(kind_code == 0, masks["global"],
+                         masks.get("local", masks["global"]))
+        att = L.gqa_attention(q, k_att, v_att, mask, scale=hd ** -0.5,
+                              softcap=cfg.attn_softcap)
+    att = att.reshape(b, s, h * hd) @ lp["wo"]
+    if cfg.gemma_norms:
+        att = _norm(att, lp["post_attn_norm"], cfg)
+    if cfg.residual_scale is not None:
+        att = att * cfg.residual_scale
+    x = x + att
+
+    m_in = _norm(x, lp["mlp_norm"], cfg)
+    if cfg.is_moe:
+        dims = L.MoEDims(cfg.n_experts, cfg.top_k,
+                         L.moe_capacity(s, cfg.top_k, cfg.n_experts,
+                                        cfg.capacity_factor))
+        mlp, aux = L.moe_ffn(m_in, lp["router"], lp["w_gate"], lp["w_up"],
+                             lp["w_down"], dims, cfg.activation,
+                             c_axes=cfg.moe_c_axes,
+                             batch_axes=cfg.attn_batch_axes)
+    else:
+        mlp = L.gated_mlp(m_in, lp["w_gate"], lp["w_up"], lp["w_down"],
+                          cfg.activation)
+        aux = {"moe_aux_loss": jnp.float32(0.0),
+               "moe_dropped_frac": jnp.float32(0.0)}
+    if cfg.gemma_norms:
+        mlp = _norm(mlp, lp["post_mlp_norm"], cfg)
+    if cfg.residual_scale is not None:
+        mlp = mlp * cfg.residual_scale
+    return x + mlp, new_cache, aux
+
+
+def _embed(cfg: LMConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale is not None:
+        x = x * jnp.asarray(cfg.embed_scale, x.dtype)
+    return x
+
+
+def _unembed(cfg: LMConfig, params, x):
+    x = _norm(x, params["final_norm"], cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.logit_scale is not None:
+        logits = logits * cfg.logit_scale
+    logits = L._softcap(logits, cfg.final_softcap)
+    return logits
+
+
+def _kind_codes(cfg: LMConfig) -> jax.Array:
+    return jnp.asarray(
+        [0 if cfg.layer_kind(i) == "global" else 1 for i in range(cfg.n_layers)],
+        jnp.int32,
+    )
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array,
+            positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence forward (training / prefill compute).  Returns f32
+    logits (B, S, padded_vocab)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)[None]
+    cos, sin = L.rope_table(cfg.head_dim, cfg.max_seq_len, cfg.rope_theta)
+    chunked = cfg.q_chunk and s >= 2 * cfg.q_chunk
+    masks = ({"global": jnp.ones((1, 1), bool)} if chunked
+             else _layer_masks(cfg, s, s))
+    x = _embed(cfg, params, tokens)
+    kinds = _kind_codes(cfg)
+
+    def body(carry, inp):
+        x, aux_sum = carry
+        lp, kind = inp
+        x, _, aux = _block(cfg, x, lp, kind, masks, cos, sin, positions)
+        return (x, aux_sum + aux["moe_aux_loss"]), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)  # per-layer rematerialization
+    (x, aux_sum), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   (params["layers"], kinds))
+    logits = _unembed(cfg, params, x)
+    return logits, aux_sum / cfg.n_layers
+
+
+def train_loss(cfg: LMConfig, params: dict, tokens: jax.Array,
+               labels: jax.Array, aux_weight: float = 0.01):
+    logits, aux = forward(cfg, params, tokens)
+    # cross entropy WITHOUT take_along_axis over the vocab axis: a gather
+    # over the model-sharded V dimension forces GSPMD to replicate the
+    # (B, S, V) logp tensor (measured: 82 GB/device on gemma2 train_4k).
+    # The iota/where form is elementwise over V — every term stays
+    # vocab-sharded and reduces with one tiny psum.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    correct = jnp.sum(
+        jnp.where(iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    ll = correct - lse
+    mask = labels >= 0
+    loss = -jnp.sum(jnp.where(mask, ll, 0.0)) / jnp.maximum(
+        jnp.sum(mask), 1
+    )
+    return loss + aux_weight * aux, {"ce_loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------- #
+# serving
+# ---------------------------------------------------------------------- #
+
+
+def make_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt)}
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: jax.Array, cache: dict):
+    """Run the prompt, filling the cache.  Returns (last-token logits,
+    cache)."""
+    b, s = tokens.shape
+    max_len = cache["k"].shape[2]
+    positions = jnp.arange(s)[None]
+    cos, sin = L.rope_table(cfg.head_dim, cfg.max_seq_len, cfg.rope_theta)
+    chunked = cfg.q_chunk and s >= 2 * cfg.q_chunk
+    masks = ({"global": jnp.ones((1, 1), bool)} if chunked
+             else _layer_masks(cfg, s, max_len))
+    x = _embed(cfg, params, tokens)
+    kinds = _kind_codes(cfg)
+
+    def body(x, inp):
+        lp, kind, ck, cv = inp
+        x, new_cache, _ = _block(cfg, x, lp, kind, masks, cos, sin, positions,
+                                 cache_kv=(ck, cv), cache_pos=0)
+        return x, new_cache
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], kinds, cache["k"], cache["v"]))
+    logits = _unembed(cfg, params, x[:, -1:, :])
+    return logits[:, 0], {"k": nk, "v": nv}
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array):
+    """One-token decode: tokens (B, 1), pos scalar (current position).
+    Returns (logits (B, padded_vocab), new cache)."""
+    b = tokens.shape[0]
+    max_len = cache["k"].shape[2]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    cos, sin = L.rope_table(cfg.head_dim, cfg.max_seq_len, cfg.rope_theta)
+    # masks over the cache: global = all positions <= pos; local = window
+    t = jnp.arange(max_len)[None, :]
+    gmask = (t <= pos)
+    lmask = gmask & (t > pos - cfg.window)
+    masks = {"global": jnp.broadcast_to(gmask, (1, max_len)),
+             "local": jnp.broadcast_to(lmask, (1, max_len))}
+    x = _embed(cfg, params, tokens)
+    kinds = _kind_codes(cfg)
+
+    def body(x, inp):
+        lp, kind, ck, cv = inp
+        x, new_cache, _ = _block(cfg, x, lp, kind, masks, cos, sin, positions,
+                                 cache_kv=(ck, cv), cache_pos=pos)
+        return x, new_cache
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], kinds, cache["k"], cache["v"]))
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], {"k": nk, "v": nv}

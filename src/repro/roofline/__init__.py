@@ -1,0 +1,2 @@
+"""Roofline analysis: compiled-HLO cost extraction (FLOPs, bytes,
+collective bytes) and the three-term roofline model for TPU v5e."""

@@ -1,0 +1,273 @@
+"""Scan-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 64 transformer layers reports 1/64th of the real FLOPs
+(verified by calibration; see EXPERIMENTS.md §Roofline-methodology).
+This module re-derives the three roofline numerators from
+``compiled.as_text()`` with loop multiplicities:
+
+  * per-computation symbol tables (instruction name -> output shape) so
+    dot FLOPs use true operand shapes;
+  * call graph: while bodies/conditions (trip count from the while
+    instruction's ``backend_config known_trip_count``), fusions, calls,
+    conditionals;
+  * multiplicity propagation from ENTRY;
+  * per computation:
+      - dot/convolution FLOPs,
+      - HBM traffic = operand + output bytes of top-level instructions
+        (fusion children excluded — the fusion is the traffic unit),
+      - collective bytes by kind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\)|[^,()]+))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_KW = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# HBM-traffic model: the CPU-optimized HLO we analyze leaves elementwise
+# chains unfused (a TPU build fuses them into their consumers), so traffic
+# counts only *materialization points* — ops whose operands/outputs
+# genuinely stream through HBM on TPU.  Elementwise/shape ops are assumed
+# perfectly fused (optimistic); dots/reductions/gathers/scatters/
+# dynamic-slices/collectives/fusions are counted with operands+outputs.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "scatter",
+    "gather", "sort", "dynamic-slice", "dynamic-update-slice", "copy",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "transpose", "select-and-scatter", "cholesky", "triangular-solve",
+    "rng", "rng-bit-generator", "iota", "pad", "concatenate", "slice",
+    "reverse", "custom-call",
+}
+
+
+def _dims_prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        total += _dims_prod(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    return (m.group(1), [int(x) for x in m.group(2).split(",") if x])
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    symtab: dict  # instruction/param name -> type string
+    instrs: list  # (name, out_type, opcode, args_str, full_rhs)
+    callees: list  # (callee_name, via_opcode)
+    whiles: list  # (body, cond, trips)
+    is_fusion_child: bool = False
+
+
+def _split_computations(hlo: str):
+    """Yield (header_line, [body lines]) for each computation block."""
+    lines = hlo.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i]
+        s = line.strip()
+        if (s.endswith("{") and ("->" in s)
+                and (s.startswith("%") or s.startswith("ENTRY"))):
+            body = []
+            i += 1
+            while i < len(lines) and lines[i].strip() != "}":
+                body.append(lines[i])
+                i += 1
+            yield line, body
+        i += 1
+
+
+def _parse_comp(header: str, body: list) -> Comp:
+    is_entry = header.strip().startswith("ENTRY")
+    name_m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)", header.strip())
+    name = name_m.group(1) if name_m else "?"
+    symtab: dict[str, str] = {}
+    # parameters from the header signature
+    sig = header[header.index("("): header.rindex("->")] if "->" in header else ""
+    for pm in _PARAM_RE.finditer(sig):
+        symtab[pm.group(1)] = pm.group(2)
+    instrs = []
+    callees = []
+    whiles = []
+    for line in body:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        iname, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.search(" " + rhs)
+        opcode = om.group(1) if om else "?"
+        # output type = everything before the opcode occurrence
+        cut = rhs.find(f"{opcode}(")
+        out_type = rhs[:cut].strip() if cut > 0 else rhs
+        symtab[iname] = out_type
+        paren = rhs.find("(", cut if cut >= 0 else 0)
+        args = rhs[paren + 1: rhs.find(")", paren)] if paren >= 0 else ""
+        instrs.append((iname, out_type, opcode, args, rhs))
+        if opcode == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+            tm = _TRIP_RE.search(rhs)
+            trips = int(tm.group(1)) if tm else 1
+            if bm and cm:
+                whiles.append((bm.group(1), cm.group(1), trips))
+        else:
+            for cm in _CALL_KW.finditer(rhs):
+                callees.append((cm.group(1), opcode))
+            br = _BRANCHES.search(rhs)
+            if br:
+                for b in br.group(1).split(","):
+                    callees.append((b.strip().lstrip("%"), "conditional"))
+    return Comp(name, symtab, instrs, callees, whiles), is_entry
+
+
+def _dot_flops(comp: Comp, out_type: str, args: str, rhs: str) -> float:
+    out = _first_shape(out_type)
+    if out is None:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    ops = re.findall(r"%([\w.\-]+)", args)
+    if not m or not ops:
+        return 0.0
+    lhs_type = comp.symtab.get(ops[0], "")
+    lhs = _first_shape(lhs_type)
+    if lhs is None:
+        return 0.0
+    csize = 1
+    for ci in (int(x) for x in m.group(1).split(",") if x):
+        if ci < len(lhs[1]):
+            csize *= lhs[1][ci]
+    return 2.0 * _dims_prod(out[1]) * csize
+
+
+def _conv_flops(comp: Comp, out_type: str, args: str, rhs: str) -> float:
+    out = _first_shape(out_type)
+    ops = re.findall(r"%([\w.\-]+)", args)
+    if out is None or len(ops) < 2:
+        return 0.0
+    ker = _first_shape(comp.symtab.get(ops[1], ""))
+    if ker is None:
+        return 0.0
+    return 2.0 * _dims_prod(out[1]) * _dims_prod(ker[1][:-1])
+
+
+def _instr_traffic(comp: Comp, out_type: str, opcode: str, args: str) -> float:
+    if opcode not in _TRAFFIC_OPS:
+        return 0.0
+    total = float(_type_bytes(out_type))
+    for op in re.findall(r"%([\w.\-]+)", args):
+        total += _type_bytes(comp.symtab.get(op, ""))
+    return total
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps: dict[str, Comp] = {}
+    entry = None
+    for header, body in _split_computations(hlo):
+        comp, is_entry = _parse_comp(header, body)
+        comps[comp.name] = comp
+        if is_entry:
+            entry = comp.name
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0,
+                "collectives": {"bytes_by_kind": {}, "counts_by_kind": {},
+                                "total_bytes": 0.0},
+                "loops": [], "n_computations": 0}
+
+    # mark fusion children (their instruction traffic is internal)
+    for comp in comps.values():
+        for callee, via in comp.callees:
+            if via == "fusion" and callee in comps:
+                comps[callee].is_fusion_child = True
+
+    mult: dict[str, float] = defaultdict(float)
+    loops = []
+
+    def visit(name: str, k: float, depth=0):
+        if name not in comps or depth > 60 or k <= 0:
+            return
+        comp = comps[name]
+        mult[name] += k
+        for body, cond, trips in comp.whiles:
+            loops.append({"body": body, "trips": trips})
+            visit(body, k * trips, depth + 1)
+            visit(cond, k * (trips + 1), depth + 1)
+        seen = set()
+        for callee, via in comp.callees:
+            if via in ("sort", "reduce", "reduce-window", "scatter",
+                       "select-and-scatter", "map", "reduce-scatter",
+                       "all-reduce"):
+                continue  # comparators/reducers: no dots, per-element cost
+            if callee in seen:
+                continue
+            seen.add(callee)
+            visit(callee, k, depth + 1)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    traffic = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, float] = defaultdict(float)
+    for name, k in mult.items():
+        comp = comps[name]
+        for iname, out_type, opcode, args, rhs in comp.instrs:
+            if opcode == "dot":
+                flops += k * _dot_flops(comp, out_type, args, rhs)
+            elif opcode == "convolution":
+                flops += k * _conv_flops(comp, out_type, args, rhs)
+            if not comp.is_fusion_child:
+                traffic += k * _instr_traffic(comp, out_type, opcode, args)
+            for kind in COLLECTIVES:
+                if opcode == kind or opcode == f"{kind}-start":
+                    b = _type_bytes(out_type)
+                    coll[kind] += k * b
+                    coll_counts[kind] += k
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collectives": {
+            "bytes_by_kind": dict(coll),
+            "counts_by_kind": {kk: int(v) for kk, v in coll_counts.items()},
+            "total_bytes": float(sum(coll.values())),
+        },
+        "loops": loops,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,3 @@
+"""Training substrate: AdamW, WSD/cosine schedules, gradient clipping,
+grad accumulation, int8 error-feedback gradient compression, and the
+fault-tolerant train loop."""

@@ -1,0 +1,105 @@
+"""Gradient compression for slow/contended interconnects: blockwise int8
+quantization with error feedback (EF-SGD style), plus a shard_map
+all-reduce that moves int8 over the wire — the collective-bytes lever of
+§Perf (4x fewer bytes than f32 ring all-reduce, 2x fewer than bf16).
+
+Semantics: quantize(g + residual) -> all_reduce int8 blocks (summed in
+int32, scales combined) -> dequantize; the quantization error is carried
+to the next step (error feedback keeps convergence unbiased in practice).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+class CompressState(NamedTuple):
+    residual: dict  # error-feedback carry, same tree as grads (f32)
+
+
+def compress_init(grads_like) -> CompressState:
+    return CompressState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                              grads_like)
+    )
+
+
+def _quantize(x: jax.Array):
+    """Blockwise symmetric int8: returns (q int8 (n/B, B), scale f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, n
+
+
+def _dequantize(q, scale, n, shape):
+    out = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return out.reshape(shape)
+
+
+def quantize_with_feedback(g: jax.Array, residual: jax.Array):
+    """Returns (q, scale, n, new_residual)."""
+    target = g.astype(jnp.float32) + residual
+    q, scale, n = _quantize(target)
+    approx = _dequantize(q, scale, n, g.shape)
+    return (q, scale, n), target - approx
+
+
+def compressed_psum_grads(grads: dict, state: CompressState, axis: str):
+    """Inside shard_map: int8 all-reduce of a gradient tree over ``axis``
+    with error feedback.  Returns (mean grads f32, new state).
+
+    Algorithm (the EF-compressed ring equivalent):
+      1. quantize(g + residual) locally — int8 blocks + f32 block scales;
+      2. all_to_all the blocks: each device receives its OWNED slice from
+         every peer (int8 on the wire) with the peers' scales;
+      3. exact dequantized reduction of the owned slice (each peer's
+         contribution uses its OWN scale — no averaged-scale bias);
+      4. re-quantize the reduced slice, all_gather int8 + scales.
+
+    Wire bytes/elem: 1 (all_to_all) + 1 (all_gather) + scales = ~2.03
+    vs 8 for the f32 ring all-reduce — a ~3.9x collective-bytes cut."""
+    n_dev = jax.lax.psum(1, axis)
+
+    def one(g, r):
+        (q, scale, n), new_r = quantize_with_feedback(g, r)
+        nb = q.shape[0]
+        pad = (-nb) % n_dev
+        if pad:
+            q = jnp.concatenate([q, jnp.zeros((pad, BLOCK), q.dtype)], 0)
+            scale = jnp.concatenate(
+                [scale, jnp.ones((pad, 1), scale.dtype)], 0)
+        nbp = q.shape[0]
+        m = nbp // n_dev
+        # 2. reduce-scatter leg: int8 on the wire
+        q_rs = jax.lax.all_to_all(q.reshape(n_dev, m, BLOCK), axis, 0, 0,
+                                  tiled=False)
+        s_rs = jax.lax.all_to_all(scale.reshape(n_dev, m, 1), axis, 0, 0,
+                                  tiled=False)
+        # 3. exact per-peer dequantized reduction of my slice
+        part = jnp.sum(q_rs.astype(jnp.float32) * s_rs, axis=0)  # (m, BLOCK)
+        # 4. re-quantize the reduced slice; all_gather int8
+        s_out = jnp.max(jnp.abs(part), axis=1, keepdims=True) / 127.0 + 1e-12
+        q_out = jnp.clip(jnp.round(part / s_out), -127, 127).astype(jnp.int8)
+        q_full = jax.lax.all_gather(q_out, axis, axis=0, tiled=True)
+        s_full = jax.lax.all_gather(s_out, axis, axis=0, tiled=True)
+        total = (q_full.astype(jnp.float32) * s_full).reshape(-1)[: n]
+        return (total / n_dev).reshape(g.shape).astype(jnp.float32), new_r
+
+    out = jax.tree.map(one, grads, state.residual)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return mean, CompressState(res)

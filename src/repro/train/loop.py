@@ -1,0 +1,154 @@
+"""Fault-tolerant training loop.
+
+Production posture (1000+ nodes):
+  * deterministic, stateless data (``TokenStream.batch_at(step)``) — any
+    host can resume at any step with zero pipeline state;
+  * checkpoint/restart: atomic async sharded checkpoints every
+    ``ckpt_every`` steps + restore-on-start (elastic across mesh sizes —
+    see checkpoint/);
+  * straggler mitigation: per-step wall-time EWMA with a deadline
+    multiplier; steps that exceed it are *recorded* and surfaced so the
+    cluster layer can evict/replace the slow host (on a single process we
+    log; the hook is the contract), plus optional step-skip logic;
+  * gradient accumulation: ``accum`` microbatches per optimizer step via
+    ``lax.scan`` (memory-flat);
+  * non-finite-loss circuit breaker: NaN/inf steps are skipped (grads
+    dropped), counted, and aborted after ``max_bad_steps`` in a row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .optim import AdamWState, adamw_init, adamw_update
+from .schedules import SCHEDULES
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    schedule: str = "cosine"  # or "wsd" (minicpm)
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    accum: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    max_bad_steps: int = 5
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    ewma: float = 0.0
+    n_stragglers: int = 0
+    worst: float = 0.0
+
+    def observe(self, dt: float, factor: float) -> bool:
+        if self.ewma == 0.0:
+            self.ewma = dt
+        is_straggler = dt > factor * self.ewma and self.ewma > 0
+        self.ewma = 0.9 * self.ewma + 0.1 * dt
+        self.worst = max(self.worst, dt)
+        if is_straggler:
+            self.n_stragglers += 1
+        return is_straggler
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig):
+    """loss_fn(params, batch) -> (loss, aux).  Returns a jit-able
+    step(params, opt_state, batch, step_idx) with grad accumulation."""
+    sched = SCHEDULES[tcfg.schedule]
+
+    def lr_at(step):
+        if tcfg.schedule == "wsd":
+            stable = int(tcfg.steps * 0.8) - tcfg.warmup
+            decay = tcfg.steps - tcfg.warmup - stable
+            return sched(step, peak_lr=tcfg.peak_lr, warmup=tcfg.warmup,
+                         stable=stable, decay=max(decay, 1))
+        return sched(step, peak_lr=tcfg.peak_lr, warmup=tcfg.warmup,
+                     total=tcfg.steps)
+
+    def step_fn(params, opt_state: AdamWState, batch, step_idx):
+        if tcfg.accum == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            # microbatch over the leading axis: batch leaves are
+            # (accum, micro, ...) — memory-flat scan
+            def micro(carry, mb):
+                acc = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, a)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, auxes) = jax.lax.scan(micro, zeros, batch)
+            grads = jax.tree.map(lambda g: g / tcfg.accum, grads)
+            loss = jnp.mean(losses)
+            aux = jax.tree.map(lambda x: jnp.mean(x), auxes)
+        lr = lr_at(step_idx)
+        finite = jnp.isfinite(loss)
+        safe_grads = jax.tree.map(
+            lambda g: jnp.where(finite, g, jnp.zeros_like(g)), grads)
+        new_params, new_opt, om = adamw_update(
+            safe_grads, opt_state, params, lr,
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm)
+        # a non-finite step is a no-op on params
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, params)
+        metrics = {"loss": loss, "lr": lr, "finite": finite, **om}
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
+def train(loss_fn: Callable, params, data_at: Callable, tcfg: TrainConfig,
+          step_fn=None, on_metrics: Optional[Callable] = None,
+          start_step: int = 0, opt_state: Optional[AdamWState] = None):
+    """Single-process driver (the multi-pod path goes through
+    launch/train.py, which jits the same step under a mesh).  Returns
+    (params, opt_state, history)."""
+    from repro.checkpoint import save_checkpoint  # local import (cycle)
+
+    step_fn = step_fn or jax.jit(make_train_step(loss_fn, tcfg))
+    opt_state = opt_state if opt_state is not None else adamw_init(params)
+    history = []
+    stats = StragglerStats()
+    bad = 0
+    for step in range(start_step, tcfg.steps):
+        t0 = time.perf_counter()
+        batch = data_at(step)
+        params, opt_state, m = step_fn(params, opt_state, batch,
+                                       jnp.asarray(step, jnp.int32))
+        loss = float(m["loss"])
+        dt = time.perf_counter() - t0
+        straggle = stats.observe(dt, tcfg.straggler_factor)
+        if not np.isfinite(loss):
+            bad += 1
+            if bad > tcfg.max_bad_steps:
+                raise FloatingPointError(
+                    f"{bad} consecutive non-finite losses at step {step}")
+        else:
+            bad = 0
+        rec = {"step": step, "loss": loss, "lr": float(m["lr"]),
+               "grad_norm": float(m["grad_norm"]), "dt": dt,
+               "straggler": straggle}
+        history.append(rec)
+        if on_metrics and step % tcfg.log_every == 0:
+            on_metrics(rec)
+        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+            save_checkpoint(tcfg.ckpt_dir, step + 1,
+                            {"params": params, "opt": opt_state},
+                            async_write=True)
+    return params, opt_state, history

@@ -1,0 +1,35 @@
+"""LR schedules: linear-warmup cosine, and WSD (warmup-stable-decay,
+the MiniCPM schedule [arXiv:2404.06395]: warmup -> long constant plateau
+-> short exponential/linear decay) — pure functions of the step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor_frac * peak_lr + (1 - floor_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.01):
+    """Warmup-Stable-Decay: the decay phase drops exponentially to
+    floor_frac * peak (MiniCPM uses ~10% tail for the decay phase)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    in_decay = step > (warmup + stable)
+    t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+    decay_lr = peak_lr * jnp.exp(jnp.log(floor_frac) * t)
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(in_decay, decay_lr, peak_lr))
+    return lr
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

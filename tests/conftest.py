@@ -1,0 +1,35 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests and benches must see the single real CPU device; only
+``launch/dryrun.py`` (its own process) requests 512 placeholder devices."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.graph import LabeledGraph, example_graph
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jit_cache_between_modules():
+    """Distinct query plans each compile an executable; keep the CPU JIT
+    arena bounded across the suite."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def ex_graph():
+    return example_graph()
+
+
+def random_graph(seed: int, n_max: int = 24, n_labels: int = 3,
+                 m_max: int = 60) -> LabeledGraph:
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, n_max))
+    m = int(rng.integers(8, m_max))
+    edges = [
+        (int(rng.integers(0, n)), int(rng.integers(0, n)),
+         int(rng.integers(0, n_labels)))
+        for _ in range(m)
+    ]
+    return LabeledGraph.from_edges(n, n_labels, edges)

@@ -1,0 +1,122 @@
+"""Device build pipeline vs the numpy oracle: path enumeration,
+k-path-bisimulation partition, CPQx / iaCPQx / Path index construction."""
+
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import baselines, capacity, interest, oracle
+from repro.core import index as cindex
+from repro.core import relational as R
+from repro.core.bisim import path_partition
+from repro.core.graph import example_graph
+from repro.core.paths import device_graph, enumerate_path_levels
+
+SEEDS = [0, 1, 2, 3, 7]
+
+
+def _partition_isomorphic(dev_pairs, opart) -> bool:
+    dev_groups = defaultdict(set)
+    for r in dev_pairs:
+        dev_groups[int(r[2])].add((int(r[0]), int(r[1])))
+    dev_set = {frozenset(s) for s in dev_groups.values()}
+    o_set = {frozenset(map(tuple, ps)) for ps in opart.classes.values()}
+    return dev_set == o_set
+
+
+class TestDevicePaths:
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize("k", [2, 3])
+    def test_levels_match_host(self, seed, k):
+        g = random_graph(seed)
+        caps = capacity.estimate_build_caps(g, k)
+        levels = enumerate_path_levels(device_graph(g), k, caps.level_rows)
+        host = capacity.path_level_counts(g, k)
+        for lvl, hrows in zip(levels, host):
+            assert not bool(lvl.overflow)
+            dev = R.to_numpy(lvl)
+            hr = hrows[
+                np.lexsort(tuple(hrows[:, j] for j in range(hrows.shape[1] - 1, -1, -1)))
+            ]
+            assert dev.shape == hr.shape
+            assert (dev == hr).all()
+
+
+class TestDeviceBisim:
+    @pytest.mark.parametrize("seed", SEEDS)
+    @pytest.mark.parametrize("k", [1, 2, 3])
+    def test_partition_matches_oracle(self, seed, k):
+        g = random_graph(seed)
+        caps = capacity.estimate_build_caps(g, k)
+        part = path_partition(device_graph(g), k, caps.level_rows,
+                              caps.pair_cap, caps.union_pair_cap)
+        assert not bool(part.overflow)
+        opart = oracle.path_partition(g, k)
+        dev_pairs = R.to_numpy(part.pairs)
+        assert dev_pairs.shape[0] == len(opart.pairs)
+        assert int(part.n_classes) == len(opart.classes)
+        assert _partition_isomorphic(dev_pairs, opart)
+
+    def test_example_graph_class_count(self, ex_graph):
+        """Fig. 3: the example partitions into 27 classes with paths at k=2
+        (the figure's 30 includes the path-less {id} and {} blocks, which
+        the index does not store — Sec. IV-B)."""
+        caps = capacity.estimate_build_caps(ex_graph, 2)
+        part = path_partition(device_graph(ex_graph), 2, caps.level_rows,
+                              caps.pair_cap, caps.union_pair_cap)
+        assert int(part.n_classes) == 27
+
+
+class TestDeviceIndexBuild:
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_cpqx_matches_oracle_index(self, seed):
+        g = random_graph(seed)
+        idx = cindex.build(g, 2)
+        oidx = oracle.build_index(g, 2)
+        assert idx.n_classes == oidx.n_classes
+        assert idx.size_entries() == (
+            sum(len(v) for v in oidx.l2c.values()),
+            sum(len(v) for v in oidx.c2p.values()),
+        )
+        # every oracle sequence is present with the same number of classes
+        for s, cs in oidx.l2c.items():
+            lo, hi = idx.lookup_range(s)
+            assert hi - lo == len(cs), f"seq {s}"
+
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_iacpqx_matches_oracle(self, seed):
+        g = random_graph(seed)
+        ints = [(0, 1), (1, 0)]
+        ia = interest.build_interest(g, 2, ints)
+        oia = oracle.build_interest_index(g, 2, ints)
+        assert ia.n_classes == oia.n_classes
+        for s, cs in oia.l2c.items():
+            lo, hi = ia.lookup_range(s)
+            assert hi - lo == len(cs), f"seq {s}"
+
+    @pytest.mark.parametrize("seed", SEEDS[:3])
+    def test_path_index_matches_oracle(self, seed):
+        g = random_graph(seed)
+        pi = baselines.build_path(g, 2)
+        opi = oracle.build_path_index(g, 2)
+        assert pi.size_entries() == opi.size_entries()
+        for s, ps in opi.l2p.items():
+            lo, hi = pi.lookup_range(s)
+            assert hi - lo == len(ps), f"seq {s}"
+
+    def test_size_comparison_thm42(self):
+        """CPQx stores each pair once in I_c2p; Path stores gamma copies."""
+        g = example_graph()
+        idx = cindex.build(g, 2)
+        pi = baselines.build_path(g, 2)
+        l2c, c2p = idx.size_entries()
+        assert c2p < pi.size_entries()  # strict on this graph (gamma > 1)
+
+    def test_interest_index_smaller(self):
+        g = example_graph()
+        idx = cindex.build(g, 2)
+        ia = interest.build_interest(g, 2, [(0, 0)])
+        assert ia.n_classes < idx.n_classes
+        assert sum(ia.size_entries()) < sum(idx.size_entries())

@@ -1,0 +1,162 @@
+"""Distributed engine + sharded model tests — run in a subprocess with 8
+forced host devices (the main test process must keep 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_with_devices(code: str, n: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+class TestDistributedEngine:
+    def test_distributed_join_matches_ground_truth(self):
+        out = _run_with_devices("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import AxisType
+            from repro.core import distributed as D
+
+            mesh = jax.make_mesh((8,), ("engine",), axis_types=(AxisType.Auto,))
+            rng = np.random.default_rng(0)
+            A = np.unique(rng.integers(0, 30, (200, 2)).astype(np.int32), axis=0)
+            B = np.unique(rng.integers(0, 30, (180, 2)).astype(np.int32), axis=0)
+            gt = sorted({(int(v), int(u)) for v, m in A for m2, u in B if m == m2})
+            a_blocks, a_counts = D.shard_relation(A, 8, 128, key_col=0)
+            b_blocks, b_counts = D.shard_relation(B, 8, 128, key_col=1)
+            a_cols = tuple(jnp.asarray(a_blocks[:, :, j]) for j in range(2))
+            b_cols = tuple(jnp.asarray(b_blocks[:, :, j]) for j in range(2))
+            join = D.make_distributed_join(mesh, "engine", 8, 2, 2,
+                                           bucket_cap=128, out_cap=4096)
+            with jax.sharding.set_mesh(mesh):
+                oc, on, ovf = join(a_cols, jnp.asarray(a_counts),
+                                   b_cols, jnp.asarray(b_counts))
+            assert not np.asarray(ovf).any()
+            ov, ou, cnt = np.asarray(oc[0]), np.asarray(oc[1]), np.asarray(on)
+            rows = sorted({(int(ov[s, i]), int(ou[s, i]))
+                           for s in range(8) for i in range(cnt[s])})
+            assert rows == gt, (len(rows), len(gt))
+            print("JOIN_OK", len(rows))
+        """)
+        assert "JOIN_OK" in out
+
+    def test_distributed_query_step(self):
+        out = _run_with_devices("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import AxisType
+            from repro.core import distributed as D
+            from repro.core import relational as R
+
+            mesh = jax.make_mesh((8,), ("engine",), axis_types=(AxisType.Auto,))
+            rng = np.random.default_rng(1)
+            n_cls = 40
+            c2p = np.unique(rng.integers(0, 25, (300, 3)).astype(np.int32), axis=0)
+            c2p[:, 0] = rng.integers(0, n_cls, c2p.shape[0])
+            c2p = c2p[np.lexsort((c2p[:,2], c2p[:,1], c2p[:,0]))]
+            ca = np.unique(rng.choice(n_cls, 10)).astype(np.int32)
+            cb = np.unique(rng.choice(n_cls, 12)).astype(np.int32)
+            inter = set(ca) & set(cb)
+            gt = sorted({(int(r[1]), int(r[2])) for r in c2p if r[0] in inter})
+            blocks, counts = D.shard_relation(c2p, 8, 128, key_col=0)
+            cols = tuple(jnp.asarray(blocks[:, :, j]) for j in range(3))
+            def padded(x, n):
+                out = np.full(n, R.SENTINEL, np.int32); out[:len(x)] = x
+                return jnp.asarray(out)
+            step = D.make_distributed_query_step(mesh, "engine")
+            with jax.sharding.set_mesh(mesh):
+                (pv, pu), pc = step(padded(ca, 16), padded(cb, 16),
+                                    cols[0], cols[1], cols[2],
+                                    jnp.asarray(counts))
+            pv, pu, pc = np.asarray(pv), np.asarray(pu), np.asarray(pc)
+            got = sorted({(int(pv[s,i]), int(pu[s,i]))
+                          for s in range(8) for i in range(pc[s])})
+            assert got == gt
+            print("QUERY_OK", len(got))
+        """)
+        assert "QUERY_OK" in out
+
+    def test_compressed_allreduce(self):
+        out = _run_with_devices("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import AxisType, PartitionSpec as P
+            from repro.train import compress
+
+            mesh = jax.make_mesh((8,), ("dp",), axis_types=(AxisType.Auto,))
+            rng = np.random.default_rng(0)
+            g_all = rng.normal(0, 1, (8, 1024)).astype(np.float32)
+            state = compress.compress_init({"g": jnp.zeros(1024)})
+
+            def body(g, res):
+                mean, new_state = compress.compressed_psum_grads(
+                    {"g": g}, compress.CompressState({"g": res}), "dp")
+                return mean["g"], new_state.residual["g"]
+
+            fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                                       in_specs=(P("dp"), P("dp")),
+                                       out_specs=(P("dp"), P("dp")),
+                                       check_vma=False))
+            with jax.sharding.set_mesh(mesh):
+                g_in = jnp.asarray(g_all.reshape(-1))
+                res = jnp.zeros_like(g_in)
+                mean, res = fn(g_in, res)
+            mean = np.asarray(mean).reshape(8, 1024)
+            true_mean = g_all.mean(0)
+            # every shard holds the same (approximate) mean
+            for s in range(8):
+                rel = np.linalg.norm(mean[s] - true_mean) / np.linalg.norm(true_mean)
+                assert rel < 0.05, rel
+            print("COMPRESS_OK")
+        """)
+        assert "COMPRESS_OK" in out
+
+    def test_sharded_lm_step_runs(self):
+        """Tiny LM train step actually EXECUTES on an 8-device mesh with
+        the production sharding rules (not just lowers)."""
+        out = _run_with_devices("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+            from repro.configs import get_arch
+            from repro.launch import shardings as S
+            from repro.models import transformer as T
+            from repro.train.optim import adamw_init, adamw_update
+
+            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                                 axis_types=(AxisType.Auto,)*3)
+            cfg = get_arch("gemma2-2b").smoke
+            params = T.init_params(cfg, jax.random.PRNGKey(0))
+            pspecs = S.lm_param_specs(cfg, mesh)
+            shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+            params = jax.device_put(params, shard)
+            opt = adamw_init(params)
+            toks = jnp.zeros((8, 16), jnp.int32)
+
+            def step(p, o, t):
+                def lf(p):
+                    return T.train_loss(cfg, p, t, t)
+                (loss, _), g = jax.value_and_grad(lf, has_aux=True)(p)
+                np_, no, _ = adamw_update(g, o, p, 1e-3)
+                return np_, no, loss
+
+            with jax.sharding.set_mesh(mesh):
+                jstep = jax.jit(step)
+                p2, o2, loss = jstep(params, opt, toks)
+                p3, o3, loss2 = jstep(p2, o2, toks)
+            assert np.isfinite(float(loss)) and float(loss2) < float(loss) + 1.0
+            print("LM_SHARDED_OK", float(loss))
+        """)
+        assert "LM_SHARDED_OK" in out

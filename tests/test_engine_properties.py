@@ -1,0 +1,70 @@
+"""Property tests on the engine's operational invariants: overflow-retry
+convergence, capacity independence of results, identity handling, and
+k=4 coverage (the paper's full k range)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_graph
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.engine import Engine, QueryCaps
+from repro.core.query import Conj, Edge, Identity, Join, parse
+
+
+class TestCapacityIndependence:
+    @given(cap=st.sampled_from([2, 8, 64, 512]))
+    @settings(max_examples=4, deadline=None)
+    def test_results_independent_of_starting_caps(self, cap, ex_graph):
+        """Any starting capacity converges to the same exact answer via
+        overflow-retry (the dynamic->static contract)."""
+        eng = Engine(cindex.build(ex_graph, 2))
+        q = parse("(f . f) & f-", {"f": 0, "v": 1}, 2)
+        got = {tuple(r) for r in eng.execute(
+            q, caps=QueryCaps(cap, cap, cap)).tolist()}
+        assert got == {(0, 2), (1, 0), (2, 1)}
+
+    def test_identity_only_query(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        got = {tuple(r) for r in eng.execute(Identity()).tolist()}
+        assert got == {(v, v) for v in range(ex_graph.n_vertices)}
+
+    def test_conj_with_identity_both_sides(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        q1 = Conj(Join(Edge(0), Edge(2)), Identity())
+        q2 = Conj(Identity(), Join(Edge(0), Edge(2)))
+        a = {tuple(r) for r in eng.execute(q1).tolist()}
+        b = {tuple(r) for r in eng.execute(q2).tolist()}
+        assert a == b == oracle.cpq_eval(ex_graph, q1)
+
+
+class TestK4:
+    """The paper evaluates k up to 4 (Sec. VI-D)."""
+
+    def test_k4_partition_and_queries(self):
+        g = random_graph(21, n_max=10, m_max=20)
+        part = oracle.path_partition(g, 4)
+        assert oracle.verify_partition(g, 4, part)
+        idx = cindex.build(g, 4)
+        opart = oracle.path_partition(g, 4)
+        assert idx.n_classes == len(opart.classes)
+        eng = Engine(idx)
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            q = oracle.random_cpq(rng, g, 3)
+            got = {tuple(r) for r in eng.execute(q).tolist()}
+            assert got == oracle.cpq_eval(g, q)
+        jax.clear_caches()
+
+    def test_diameter_k_query_uses_single_lookup(self):
+        """A diameter-k chain on a k-index is ONE lookup (Sec. VI-D: the
+        query with diameter i is fastest when k = i)."""
+        g = random_graph(22, n_max=10, m_max=25)
+        idx = cindex.build(g, 3)
+        eng = Engine(idx)
+        q = Join(Edge(0), Join(Edge(1), Edge(0)))
+        plan = eng.plan(q)
+        assert plan[0] == "lookup" and len(plan[1]) == 1
+        assert len(plan[1][0]) == 3

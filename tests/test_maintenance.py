@@ -1,0 +1,96 @@
+"""Lazy maintenance (Sec. IV-E / V-C): query answers stay exact after
+edge / vertex / interest updates (Prop. 4.2); index growth stays bounded."""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import oracle
+from repro.core.maintenance import MaintainableIndex
+
+
+def _validate(mi, seed=9, trials=12):
+    rng = np.random.default_rng(seed)
+    for _ in range(trials):
+        q = oracle.random_cpq(rng, mi.g, 3)
+        assert mi.query(q) == oracle.cpq_eval(mi.g, q)
+
+
+class TestEdgeUpdates:
+    def test_delete_then_correct(self):
+        g = random_graph(5, n_max=16, m_max=40)
+        mi = MaintainableIndex.build(g, 2)
+        base = mi.g._base_edges()
+        for i in range(3):
+            v, u, l = map(int, base[i * 2])
+            mi.delete_edge(v, u, l)
+        _validate(mi)
+        assert mi.n_splits > 0  # lazy splits happened, never merges
+
+    def test_insert_then_correct(self):
+        g = random_graph(6, n_max=16, m_max=30)
+        mi = MaintainableIndex.build(g, 2)
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            mi.insert_edge(int(rng.integers(0, g.n_vertices)),
+                           int(rng.integers(0, g.n_vertices)),
+                           int(rng.integers(0, g.n_labels)))
+        _validate(mi)
+
+    def test_delete_insert_roundtrip_semantics(self):
+        """Deleting and re-inserting the same edge must restore ⟦q⟧ even
+        though the partition is now lazily split."""
+        g = random_graph(7, n_max=14, m_max=30)
+        mi = MaintainableIndex.build(g, 2)
+        v, u, l = map(int, mi.g._base_edges()[0])
+        before = {}
+        rng = np.random.default_rng(1)
+        queries = [oracle.random_cpq(rng, g, 3) for _ in range(8)]
+        for i, q in enumerate(queries):
+            before[i] = oracle.cpq_eval(g, q)
+        mi.delete_edge(v, u, l)
+        mi.insert_edge(v, u, l)
+        for i, q in enumerate(queries):
+            assert mi.query(q) == before[i]
+
+    def test_vertex_delete(self):
+        g = random_graph(8, n_max=14, m_max=30)
+        mi = MaintainableIndex.build(g, 2)
+        mi.delete_vertex(2)
+        _validate(mi)
+        for s, d in zip(mi.g.src, mi.g.dst):
+            assert 2 not in (int(s), int(d))
+
+    def test_size_growth_bounded(self):
+        """Table VII: modest growth under a batch of updates."""
+        g = random_graph(9, n_max=16, m_max=40)
+        mi = MaintainableIndex.build(g, 2)
+        l2c0, c2p0 = mi.size_entries()
+        rng = np.random.default_rng(2)
+        base = mi.g._base_edges()
+        for i in range(2):
+            v, u, l = map(int, base[i])
+            mi.delete_edge(v, u, l)
+            mi.insert_edge(v, u, l)
+        l2c1, c2p1 = mi.size_entries()
+        assert c2p1 <= c2p0 * 2 + 10
+        assert l2c1 <= l2c0 * 3 + 10
+
+
+class TestInterestUpdates:
+    def test_interest_delete_insert(self):
+        g = random_graph(10, n_max=16, m_max=40)
+        mi = MaintainableIndex.build(g, 2, interests=[(0, 1), (1, 1)])
+        mi.delete_interest((0, 1))
+        _validate(mi)
+        mi.insert_interest((2, 0))
+        _validate(mi)
+
+    def test_mixed_graph_and_interest_updates(self):
+        g = random_graph(12, n_max=14, m_max=30)
+        mi = MaintainableIndex.build(g, 2, interests=[(0, 0)])
+        v, u, l = map(int, mi.g._base_edges()[0])
+        mi.delete_edge(v, u, l)
+        mi.insert_interest((1, 0))
+        mi.insert_edge(v, u, l)
+        _validate(mi)

@@ -1,0 +1,152 @@
+"""Oracle self-consistency: the numpy reference implements the paper's
+semantics, partitions, indexes and query algorithms coherently."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_graph
+from repro.core import oracle
+from repro.core.graph import example_graph
+from repro.core.query import (
+    Conj, Edge, Identity, Join, diameter, instantiate_template, parse,
+    plan_query, TEMPLATES,
+)
+
+
+class TestPaperExample:
+    """The running example of Sec. I / Example 4.3."""
+
+    def test_triad_query(self, ex_graph):
+        q = parse("(f . f) & f-", {"f": 0, "v": 1}, 2)
+        ans = oracle.cpq_eval(ex_graph, q)
+        # (sue, zoe), (joe, sue), (zoe, joe)
+        assert ans == {(0, 2), (1, 0), (2, 1)}
+
+    def test_index_agrees(self, ex_graph):
+        idx = oracle.build_index(ex_graph, 2)
+        q = parse("(f . f) & f-", {"f": 0, "v": 1}, 2)
+        assert oracle.query_with_index(ex_graph, idx, q) == oracle.cpq_eval(
+            ex_graph, q
+        )
+
+    def test_example_41_lookup_pruning(self, ex_graph):
+        """Example 4.1: |C(ff) ∩ C(f⁻)| = 1 — a single class answers."""
+        idx = oracle.build_index(ex_graph, 2)
+        c_ff = set(idx.l2c[(0, 0)])
+        c_finv = set(idx.l2c[(2,)])
+        both = c_ff & c_finv
+        assert len(both) == 1
+        (c,) = both
+        assert set(idx.c2p[c]) == {(0, 2), (1, 0), (2, 1)}
+
+
+class TestSemantics:
+    def test_identity(self, ex_graph):
+        assert oracle.cpq_eval(ex_graph, Identity()) == {
+            (v, v) for v in range(ex_graph.n_vertices)
+        }
+
+    def test_diameter(self):
+        q = Conj(Join(Edge(0), Join(Edge(1), Edge(0))), Join(Edge(1), Edge(1)))
+        assert diameter(q) == 3
+        assert diameter(Conj(q, Identity())) == 3
+        assert diameter(Identity()) == 0
+
+    def test_parser_roundtrip(self):
+        ids = {"f": 0, "v": 1}
+        q = parse("((f . v-) & id) . f^-1", ids, 2)
+        assert isinstance(q, Join)
+        assert diameter(q) == 3
+
+    def test_parser_rejects_garbage(self):
+        with pytest.raises(SyntaxError):
+            parse("f . . v", {"f": 0, "v": 1}, 2)
+        with pytest.raises(SyntaxError):
+            parse("unknown", {"f": 0}, 1)
+
+
+class TestPartition:
+    """The CPQ-correctness invariant (Thm. 4.1 / Cor. 4.1)."""
+
+    @given(seed=st.integers(0, 10_000), k=st.sampled_from([1, 2, 3]))
+    @settings(max_examples=15, deadline=None)
+    def test_partition_is_cpq_correct(self, seed, k):
+        g = random_graph(seed)
+        part = oracle.path_partition(g, k)
+        assert oracle.verify_partition(g, k, part)
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_interest_partition_is_cpq_correct_for_interests(self, seed):
+        g = random_graph(seed)
+        part = oracle.interest_partition(g, 2, [(0, 1)])
+        # every class must be pure w.r.t. membership in any interest seq
+        seqs = oracle.enumerate_pairs(g, 2)
+        lq = {(l,) for l in range(g.alphabet_size)} | {(0, 1)}
+        for c, ps in part.classes.items():
+            sig0 = frozenset(s for s in seqs.get(ps[0], ()) if s in lq)
+            for p in ps[1:]:
+                assert frozenset(s for s in seqs.get(p, ()) if s in lq) == sig0
+
+    def test_refinement(self):
+        """k-path-bisim refines interest-equivalence (Sec. V-A)."""
+        g = example_graph()
+        bis = oracle.path_partition(g, 2)
+        ia = oracle.interest_partition(g, 2, [(0, 0)])
+        ia_class_of = ia.class_of
+        mapping = {}
+        for p, c in bis.class_of.items():
+            if p not in ia_class_of:
+                continue
+            if c in mapping:
+                assert mapping[c] == ia_class_of[p]
+            mapping[c] = ia_class_of[p]
+
+    def test_index_never_larger_than_path_index(self):
+        """Thm. 4.2: |CPQx| = O(gamma|C| + |P|) <= O(gamma|P|) = |Path|."""
+        for seed in (1, 2, 3):
+            g = random_graph(seed)
+            idx = oracle.build_index(g, 2)
+            pidx = oracle.build_path_index(g, 2)
+            l2c, c2p = idx.size_entries()
+            assert l2c + c2p <= 2 * pidx.size_entries() + len(idx.c2p)
+            # the l2c side alone is never larger than the path index
+            assert l2c <= pidx.size_entries()
+
+
+class TestQueryEquivalence:
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_all_evaluators_agree(self, seed):
+        g = random_graph(seed)
+        idx = oracle.build_index(g, 2)
+        pidx = oracle.build_path_index(g, 2)
+        ia = oracle.build_interest_index(g, 2, [(0, 1)])
+        rng = np.random.default_rng(seed)
+        for _ in range(15):
+            q = oracle.random_cpq(rng, g, 3)
+            gt = oracle.cpq_eval(g, q)
+            assert oracle.query_with_index(g, idx, q) == gt
+            assert oracle.query_with_path_index(g, pidx, q) == gt
+            assert oracle.query_with_index(g, ia, q) == gt
+
+    def test_templates_cover_language(self, ex_graph):
+        idx = oracle.build_index(ex_graph, 2)
+        rng = np.random.default_rng(0)
+        for name in TEMPLATES:
+            labels = rng.integers(0, ex_graph.alphabet_size, 8).tolist()
+            q = instantiate_template(name, labels)
+            gt = oracle.cpq_eval(ex_graph, q)
+            assert oracle.query_with_index(ex_graph, idx, q) == gt
+
+    def test_plan_splits_long_chains(self):
+        q = Join(Edge(0), Join(Edge(1), Join(Edge(0), Edge(1))))
+        plan = plan_query(q, 2)
+        assert plan[0] == "lookup"
+        assert [len(s) for s in plan[1]] == [2, 2]
+
+    def test_plan_available_restriction(self):
+        q = Join(Edge(0), Edge(1))
+        plan = plan_query(q, 2, available={(0,), (1,)})
+        assert [len(s) for s in plan[1]] == [1, 1]

@@ -1,0 +1,153 @@
+"""Unit + property tests for the capacity-padded relational algebra —
+the substrate every engine op builds on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import relational as R
+
+
+def _np_rel(rows, cap):
+    return R.from_numpy(np.asarray(rows, np.int32).reshape(-1, 2), cap)
+
+
+class TestSortUniqueRank:
+    def test_sort_and_sentinel_padding(self):
+        rel = _np_rel([[3, 1], [1, 2], [2, 0]], 8)
+        s = R.rel_sort(rel)
+        out = R.to_numpy(s)
+        assert out.tolist() == [[1, 2], [2, 0], [3, 1]]
+        # padding sorts to the end
+        assert int(np.asarray(s.cols[0])[-1]) == R.SENTINEL
+
+    def test_unique(self):
+        rel = R.rel_sort(_np_rel([[1, 1], [1, 1], [2, 2], [2, 3], [2, 3]], 8))
+        u = R.rel_unique(rel)
+        assert R.to_numpy(u).tolist() == [[1, 1], [2, 2], [2, 3]]
+
+    def test_dense_rank(self):
+        rel = R.rel_sort(_np_rel([[1, 1], [1, 1], [2, 2], [3, 3]], 8))
+        ranks, n = R.dense_rank(rel)
+        assert int(n) == 3
+        assert np.asarray(ranks)[:4].tolist() == [0, 0, 1, 2]
+
+    def test_compact_stable(self):
+        rel = _np_rel([[5, 0], [1, 0], [7, 0], [2, 0]], 8)
+        keep = jnp.array([True, False, True, False] + [False] * 4)
+        c = R.rel_compact(rel, keep)
+        assert R.to_numpy(c)[:, 0].tolist() == [5, 7]
+
+
+class TestBinarySearch:
+    @given(
+        hay=st.lists(st.integers(0, 50), min_size=1, max_size=80),
+        needles=st.lists(st.integers(-5, 60), min_size=1, max_size=40),
+        side=st.sampled_from(["left", "right"]),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_matches_numpy_1col(self, hay, needles, side):
+        h = np.sort(np.asarray(hay, np.int32))
+        n = np.asarray(needles, np.int32)
+        got = np.asarray(R.lex_searchsorted((jnp.array(h),), (jnp.array(n),), side))
+        exp = np.searchsorted(h, n, side)
+        assert (got == exp).all()
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        side=st.sampled_from(["left", "right"]),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_matches_numpy_2col(self, seed, side):
+        rng = np.random.default_rng(seed)
+        hay = rng.integers(0, 8, (rng.integers(1, 60), 2)).astype(np.int32)
+        hay = hay[np.lexsort((hay[:, 1], hay[:, 0]))]
+        nee = rng.integers(-1, 10, (20, 2)).astype(np.int32)
+        enc_h = hay[:, 0] * 100 + hay[:, 1]
+        enc_n = nee[:, 0] * 100 + nee[:, 1]
+        got = np.asarray(
+            R.lex_searchsorted(
+                (jnp.array(hay[:, 0]), jnp.array(hay[:, 1])),
+                (jnp.array(nee[:, 0]), jnp.array(nee[:, 1])),
+                side,
+            )
+        )
+        assert (got == np.searchsorted(enc_h, enc_n, side)).all()
+
+
+class TestSetOps:
+    def test_intersect(self):
+        a = R.rel_sort(_np_rel([[1, 1], [2, 2], [3, 3], [5, 5]], 8))
+        b = R.rel_sort(_np_rel([[2, 2], [3, 3], [9, 9]], 8))
+        assert R.to_numpy(R.rel_intersect(a, b)).tolist() == [[2, 2], [3, 3]]
+
+    def test_difference(self):
+        a = R.rel_sort(_np_rel([[1, 1], [2, 2], [3, 3]], 8))
+        b = R.rel_sort(_np_rel([[2, 2]], 4))
+        assert R.to_numpy(R.rel_difference(a, b)).tolist() == [[1, 1], [3, 3]]
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_intersect_matches_python_sets(self, seed):
+        rng = np.random.default_rng(seed)
+        a = np.unique(rng.integers(0, 20, (30, 2)).astype(np.int32), axis=0)
+        b = np.unique(rng.integers(0, 20, (30, 2)).astype(np.int32), axis=0)
+        ra = R.rel_sort(R.from_numpy(a, 64))
+        rb = R.rel_sort(R.from_numpy(b, 64))
+        got = {tuple(r) for r in R.to_numpy(R.rel_intersect(ra, rb)).tolist()}
+        exp = {tuple(r) for r in a.tolist()} & {tuple(r) for r in b.tolist()}
+        assert got == exp
+
+    def test_concat_overflow_flag(self):
+        a = _np_rel([[1, 1], [2, 2]], 4)
+        b = _np_rel([[3, 3], [4, 4], [5, 5]], 4)
+        c = R.rel_concat(a, b, 4)
+        assert bool(c.overflow)
+        c2 = R.rel_concat(a, b, 8)
+        assert not bool(c2.overflow) and int(c2.count) == 5
+
+
+class TestExpansionJoin:
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_matches_python_join(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, 8, (rng.integers(1, 25), 2)).astype(np.int32)
+        b = rng.integers(0, 8, (rng.integers(1, 25), 2)).astype(np.int32)
+        b = b[np.lexsort((b[:, 1], b[:, 0]))]
+        ra = R.from_numpy(a, 32)
+        rb = R.from_numpy(b, 32)
+        out = R.expansion_join(ra, rb, a_on=[1], out_cols=[("a", 0), ("b", 1)],
+                               out_capacity=1024)
+        got = sorted(map(tuple, R.to_numpy(out).tolist()))
+        exp = sorted(
+            (int(x), int(w)) for x, y in a for v, w in b if y == v
+        )
+        assert got == exp
+
+    def test_overflow_flag(self):
+        a = _np_rel([[0, 1]], 4)
+        b = R.rel_sort(_np_rel([[1, 5], [1, 6], [1, 7]], 4))
+        out = R.expansion_join(a, b, [1], [("a", 0), ("b", 1)], 2)
+        assert bool(out.overflow) and int(out.count) == 2
+
+
+class TestFingerprints:
+    def test_order_invariance(self):
+        c1 = (jnp.array([5, 3, 9], jnp.int32), jnp.array([1, 2, 0], jnp.int32))
+        c2 = (jnp.array([9, 5, 3], jnp.int32), jnp.array([0, 1, 2], jnp.int32))
+        seg = jnp.zeros(3, jnp.int32)
+        ok = jnp.array([True] * 3)
+        f1 = R.segment_fingerprint(*R.fingerprint_rows(c1), seg, 1, ok)
+        f2 = R.segment_fingerprint(*R.fingerprint_rows(c2), seg, 1, ok)
+        assert int(f1[0][0]) == int(f2[0][0]) and int(f1[1][0]) == int(f2[1][0])
+
+    def test_different_sets_differ(self):
+        c1 = (jnp.array([5, 3], jnp.int32),)
+        c2 = (jnp.array([5, 4], jnp.int32),)
+        seg = jnp.zeros(2, jnp.int32)
+        ok = jnp.array([True] * 2)
+        f1 = R.segment_fingerprint(*R.fingerprint_rows(c1), seg, 1, ok)
+        f2 = R.segment_fingerprint(*R.fingerprint_rows(c2), seg, 1, ok)
+        assert (int(f1[0][0]), int(f1[1][0])) != (int(f2[0][0]), int(f2[1][0]))

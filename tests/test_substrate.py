@@ -1,0 +1,225 @@
+"""Substrate tests: optimizer, schedules, train loop (incl. resume +
+NaN breaker), checkpointing (atomic/async/elastic), data generators,
+neighbor sampler, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint, save_checkpoint,
+                              wait_for_writes)
+from repro.data.graphs import gmark_citation, powerlaw_graph
+from repro.data.sampler import random_csr, sample_fanout
+from repro.data.tokens import TokenStream
+from repro.train import compress
+from repro.train.loop import StragglerStats, TrainConfig, make_train_step, train
+from repro.train.optim import adamw_init, adamw_update, global_norm
+from repro.train.schedules import cosine, wsd
+
+
+class TestOptim:
+    def test_adamw_decreases_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = adamw_init(params)
+
+        def loss(p):
+            return jnp.sum(p["w"] ** 2)
+
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, opt, _ = adamw_update(g, opt, params, lr=0.1,
+                                          weight_decay=0.0)
+        assert float(loss(params)) < 1e-2
+
+    def test_clip(self):
+        params = {"w": jnp.ones(4)}
+        opt = adamw_init(params)
+        g = {"w": jnp.full(4, 1e6)}
+        _, _, m = adamw_update(g, opt, params, lr=0.1, clip_norm=1.0)
+        assert float(m["clip_scale"]) < 1e-5
+
+
+class TestSchedules:
+    def test_cosine_shape(self):
+        lrs = [float(cosine(s, peak_lr=1.0, warmup=10, total=100))
+               for s in range(100)]
+        assert lrs[0] == 0.0
+        assert abs(lrs[10] - 1.0) < 0.05
+        assert lrs[99] < 0.2
+        assert all(a >= b - 1e-6 for a, b in zip(lrs[10:], lrs[11:]))
+
+    def test_wsd_plateau(self):
+        lrs = [float(wsd(s, peak_lr=1.0, warmup=10, stable=70, decay=20))
+               for s in range(100)]
+        assert abs(lrs[40] - 1.0) < 1e-6  # stable plateau
+        assert abs(lrs[75] - 1.0) < 1e-6
+        assert lrs[99] < 0.1  # decayed
+
+
+class TestTrainLoop:
+    def _setup(self):
+        def loss_fn(p, batch):
+            x, y = batch
+            pred = x @ p["w"]
+            return jnp.mean((pred - y) ** 2), {}
+
+        rng = np.random.default_rng(0)
+        w_true = rng.normal(0, 1, (4, 1)).astype(np.float32)
+
+        def data_at(step):
+            r = np.random.default_rng(step)
+            x = r.normal(0, 1, (16, 4)).astype(np.float32)
+            return jnp.asarray(x), jnp.asarray(x @ w_true)
+
+        params = {"w": jnp.zeros((4, 1))}
+        return loss_fn, params, data_at
+
+    def test_loss_decreases(self):
+        loss_fn, params, data_at = self._setup()
+        tcfg = TrainConfig(steps=60, peak_lr=0.05, warmup=5)
+        _, _, hist = train(loss_fn, params, data_at, tcfg)
+        assert hist[-1]["loss"] < hist[0]["loss"] * 0.1
+
+    def test_resume_is_deterministic(self, tmp_path):
+        loss_fn, params, data_at = self._setup()
+        tcfg = TrainConfig(steps=30, peak_lr=0.05, warmup=5,
+                           ckpt_dir=str(tmp_path), ckpt_every=10)
+        p1, o1, h1 = train(loss_fn, params, data_at, tcfg)
+        wait_for_writes()
+        # resume from step 20 and rerun the tail
+        from repro.checkpoint import restore_sharded
+
+        like = {"params": params, "opt": adamw_init(params)}
+        restored = restore_sharded(str(tmp_path), 20, like)
+        p2, o2, h2 = train(loss_fn, restored["params"], data_at,
+                           TrainConfig(steps=30, peak_lr=0.05, warmup=5),
+                           start_step=20, opt_state=restored["opt"])
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                                   rtol=1e-5)
+
+    def test_nan_breaker(self):
+        def loss_fn(p, batch):
+            return jnp.float32(np.nan) * jnp.sum(p["w"]), {}
+
+        params = {"w": jnp.ones(2)}
+        tcfg = TrainConfig(steps=20, peak_lr=0.1, warmup=1, max_bad_steps=3)
+        with pytest.raises(FloatingPointError):
+            train(loss_fn, params, lambda s: (jnp.zeros(1), jnp.zeros(1)),
+                  tcfg)
+
+    def test_straggler_detection(self):
+        st = StragglerStats()
+        for _ in range(10):
+            st.observe(0.1, 3.0)
+        assert st.observe(10.0, 3.0)  # 100x the EWMA
+        assert st.n_stragglers == 1
+
+    def test_grad_accumulation_matches_large_batch(self):
+        loss_fn, params, data_at = self._setup()
+        x, y = data_at(0)
+        step1 = jax.jit(make_train_step(loss_fn, TrainConfig(steps=10,
+                                                             accum=1)))
+        step2 = jax.jit(make_train_step(loss_fn, TrainConfig(steps=10,
+                                                             accum=4)))
+        opt = adamw_init(params)
+        p1, _, _ = step1(params, opt, (x, y), jnp.int32(5))
+        xs = x.reshape(4, 4, 4)
+        ys = y.reshape(4, 4, 1)
+        p2, _, _ = step2(params, opt, (xs, ys), jnp.int32(5))
+        np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                                   rtol=1e-4)
+
+
+class TestCheckpoint:
+    def test_atomic_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        back = load_checkpoint(str(tmp_path), 7, tree)
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree["a"]))
+        assert back["b"]["c"].dtype == jnp.bfloat16
+
+    def test_async_then_wait(self, tmp_path):
+        tree = {"x": jnp.ones((128, 128))}
+        save_checkpoint(str(tmp_path), 1, tree, async_write=True)
+        wait_for_writes()
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, {"x": jnp.ones(4)})
+        with pytest.raises(ValueError):
+            load_checkpoint(str(tmp_path), 1, {"x": jnp.ones(5)})
+
+    def test_no_partial_commit(self, tmp_path):
+        """A .tmp directory must never be visible as a committed step."""
+        save_checkpoint(str(tmp_path), 3, {"x": jnp.ones(2)})
+        names = os.listdir(tmp_path)
+        assert "step_000000003" in names
+        assert not any(n.endswith(".tmp") for n in names)
+
+
+class TestData:
+    def test_token_stream_deterministic(self):
+        s = TokenStream(100, 4, 16, seed=1)
+        a1, b1 = s.batch_at(5)
+        a2, b2 = s.batch_at(5)
+        np.testing.assert_array_equal(a1, a2)
+        # shard slices tile the global batch
+        rows = [s.shard_at(5, i, 4)[0] for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(rows, 0), a1)
+
+    def test_gmark_schema_roles(self):
+        g = gmark_citation(200, seed=0)
+        assert g.n_labels == 6
+        # heldIn (label 5) goes venue -> city only
+        m = g.lbl == 5
+        assert (g.src[m] >= 160).all() and (g.dst[m] >= 190).all()
+
+    def test_powerlaw_label_distribution(self):
+        g = powerlaw_graph(500, 4000, n_labels=8, seed=0)
+        base = g.lbl[g.lbl < 8]
+        counts = np.bincount(base, minlength=8)
+        assert counts[0] > counts[2] > counts[5]  # exponentially decaying
+
+    def test_fanout_sampler(self):
+        g = random_csr(1000, avg_degree=12, seed=0)
+        seeds = np.arange(8)
+        sub = sample_fanout(g, seeds, (4, 3), seed=1)
+        assert sub.node_ids.shape[0] == 8 + 32 + 96
+        assert sub.senders.shape[0] == 32 + 96
+        # every masked edge points at a real node
+        for s, r, ok in zip(sub.senders, sub.receivers, sub.edge_mask):
+            if ok:
+                assert sub.node_ids[s] >= 0 and sub.node_ids[r] >= 0
+
+
+class TestCompression:
+    def test_quantize_error_feedback(self):
+        rng = np.random.default_rng(0)
+        g = jnp.array(rng.normal(0, 1, (1000,)), jnp.float32)
+        res = jnp.zeros_like(g)
+        (q, scale, n), new_res = compress.quantize_with_feedback(g, res)
+        approx = compress._dequantize(q, scale, n, g.shape)
+        # int8 blockwise: < 1% relative error per block
+        assert float(jnp.linalg.norm(approx - g) / jnp.linalg.norm(g)) < 0.01
+        # residual carries the quantization error exactly
+        np.testing.assert_allclose(np.asarray(new_res),
+                                   np.asarray(g - approx), atol=1e-7)
+
+    def test_error_feedback_converges(self):
+        """Repeated compressed accumulation of the same gradient converges
+        to the true sum (EF property)."""
+        rng = np.random.default_rng(1)
+        g = jnp.array(rng.normal(0, 1, (512,)), jnp.float32)
+        res = jnp.zeros_like(g)
+        total = jnp.zeros_like(g)
+        for _ in range(50):
+            (q, scale, n), res = compress.quantize_with_feedback(g, res)
+            total = total + compress._dequantize(q, scale, n, g.shape)
+        np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g),
+                                   atol=2e-3)
