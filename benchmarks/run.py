@@ -21,6 +21,7 @@ BENCHES = {
     "fig14": "benchmarks.bench_k",  # behavior in k (+ fig 15)
     "fig11": "benchmarks.bench_scalability",  # graph-size scaling
     "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp reference
+    "throughput": "benchmarks.bench_throughput",  # serving qps (PR 1)
 }
 
 

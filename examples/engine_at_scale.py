@@ -15,8 +15,8 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import distributed as D  # noqa: E402
 from repro.core import index as cindex  # noqa: E402
 from repro.core import oracle, relational as R  # noqa: E402
@@ -26,8 +26,7 @@ from repro.data.graphs import gmark_citation  # noqa: E402
 
 def main() -> None:
     n_shards = 8
-    mesh = jax.make_mesh((n_shards,), ("engine",),
-                         axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((n_shards,), ("engine",))
     g = gmark_citation(400, avg_degree=6, seed=0)
     idx = cindex.build(g, 2)
     print(f"graph {g}; CPQx: {idx.n_classes} classes, {idx.n_pairs} pairs")
@@ -54,7 +53,7 @@ def main() -> None:
         return jnp.asarray(out)
 
     step = D.make_distributed_query_step(mesh, "engine")
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         (pv, pu), pc = step(class_list(la), class_list(lb),
                             cols[0], cols[1], cols[2], jnp.asarray(counts))
     pv, pu, pc = np.asarray(pv), np.asarray(pu), np.asarray(pc)

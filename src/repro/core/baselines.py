@@ -143,9 +143,10 @@ def run_plan_path(a: PathArrays, plan, caps: QueryCaps, n_vertices: int,
     def ev(node):
         kind = node[0]
         if kind == "lookup":
+            nseg = node[1] if isinstance(node[1], int) else len(node[1])
             start, length = next_range()
             cur = _lookup_pairs(a, start, length, caps.pair_cap)
-            for _ in node[1][1:]:
+            for _ in range(nseg - 1):
                 start, length = next_range()
                 nxt = _lookup_pairs(a, start, length, caps.pair_cap)
                 cur = _join_pairs(cur, nxt, caps.join_cap, caps.pair_cap)
@@ -180,7 +181,7 @@ class PathEngine:
 
     def execute(self, q: CPQ, caps: QueryCaps | None = None,
                 max_retries: int = 8) -> np.ndarray:
-        from .engine import _freeze
+        from .query import plan_shape
 
         plan = plan_query(q, self.index.k, available=self._available)
         seqs = plan_lookup_seqs(plan)
@@ -193,7 +194,7 @@ class PathEngine:
             caps = QueryCaps(class_cap=16, pair_cap=p2, join_cap=2 * p2)
         for _ in range(max_retries):
             pairs, overflow = run_plan_path(
-                self.index.arrays, _freeze(plan), caps, self.index.n_vertices,
+                self.index.arrays, plan_shape(plan), caps, self.index.n_vertices,
                 jnp.asarray(ranges),
             )
             if not bool(overflow):

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from . import relational as R
 
 I32 = jnp.int32
@@ -165,14 +166,13 @@ def make_distributed_join(mesh, axis: str, n_shards: int, a_arity: int,
 
     spec = P(axis)
     out_arity = a_arity + b_arity - 2
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(
             tuple(spec for _ in range(a_arity)), spec,
             tuple(spec for _ in range(b_arity)), spec,
         ),
         out_specs=(tuple(spec for _ in range(out_arity)), spec, spec),
-        check_vma=False,
     )
     return jax.jit(fn)
 
@@ -230,10 +230,9 @@ def make_distributed_query_step(mesh, axis: str):
         out = R.rel_compact(local, keep)
         return (out.cols[1][None], out.cols[2][None]), out.count[None]
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(), P(), spec, spec, spec, spec),
         out_specs=((spec, spec), spec),
-        check_vma=False,
     )
     return jax.jit(fn)

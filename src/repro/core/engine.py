@@ -28,7 +28,7 @@ import numpy as np
 
 from . import relational as R
 from .index import CPQxIndex, DeviceIndexArrays
-from .query import CPQ, plan_query, plan_lookup_seqs
+from .query import CPQ, plan_query, plan_lookup_seqs, plan_shape
 from repro.kernels import ops as kops
 
 
@@ -109,12 +109,15 @@ def _conj_id_classes(a: DeviceIndexArrays, classes: R.Relation) -> R.Relation:
 # ---------------------------------------------------------------------- #
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "caps", "n_vertices"))
-def run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
-             lookup_ranges: jax.Array):
+def _run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
+              lookup_ranges: jax.Array):
     """Execute a physical plan.  ``lookup_ranges``: (n_lookups, 2) int32 of
     (start, len) per LOOKUP segment, in plan order.  Returns a pair
-    Relation (sorted distinct (v, u)) and the sticky overflow flag."""
+    Relation (sorted distinct (v, u)) and the sticky overflow flag.
+
+    ``plan`` may be a frozen plan or its :func:`plan_shape` — the device
+    computation only depends on the shape (LOOKUP nodes carry their
+    segment count; the label values stream in via ``lookup_ranges``)."""
     counter = [0]
 
     def next_range():
@@ -131,10 +134,10 @@ def run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
     def ev(node):
         kind = node[0]
         if kind == "lookup":
-            segs = node[1]
+            nseg = node[1] if isinstance(node[1], int) else len(node[1])
             start, length = next_range()
             cur = ("classes", _lookup_classes(a, start, length, caps.class_cap))
-            for _ in segs[1:]:
+            for _ in range(nseg - 1):
                 start, length = next_range()
                 nxt = _lookup_classes(a, start, length, caps.class_cap)
                 cur = ("pairs", _join_pairs(as_pairs(cur),
@@ -178,9 +181,39 @@ def run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
     return pairs, pairs.overflow
 
 
+run_plan = functools.partial(
+    jax.jit, static_argnames=("plan", "caps", "n_vertices"))(_run_plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "caps", "n_vertices"))
+def run_plan_batch(a: DeviceIndexArrays, plan, caps: QueryCaps,
+                   n_vertices: int, lookup_ranges: jax.Array):
+    """Batched :func:`run_plan`: ``lookup_ranges`` is (batch, n_lookups, 2)
+    and the whole batch evaluates through one vmapped dispatch of the same
+    executable a single query would use.  Returns a batched Relation
+    (cols (batch, cap)) and a per-query (batch,) overflow vector — each
+    lane's overflow is its own sticky flag, so the host retries only the
+    lanes that overflowed."""
+    return jax.vmap(lambda r: _run_plan(a, plan, caps, n_vertices, r))(
+        lookup_ranges)
+
+
 # ---------------------------------------------------------------------- #
 # host driver
 # ---------------------------------------------------------------------- #
+
+
+def _pow2(n: int) -> int:
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+
+
+def _has_identity(shape) -> bool:
+    if shape[0] == "identity":
+        return True
+    return any(_has_identity(s) for s in shape[1:]
+               if isinstance(s, tuple))
 
 
 class Engine:
@@ -189,35 +222,153 @@ class Engine:
     def __init__(self, index: CPQxIndex):
         self.index = index
         self._available = index.available_seqs() if index.interests is not None else None
+        # host mirrors for the adaptive capacity estimator: per-class pair
+        # counts and the l2c class table (a few KB — pulled once)
+        starts = np.asarray(index.arrays.class_starts, np.int64)
+        self._class_sizes = starts[1:] - starts[:-1]
+        self._l2c_host = np.asarray(index.arrays.l2c_cls, np.int64)
+        self._default_caps = default_caps(index)  # one device sync, here
 
     def plan(self, q: CPQ):
         return plan_query(q, self.index.k, available=self._available)
 
-    def execute(self, q: CPQ, caps: QueryCaps | None = None,
-                max_retries: int = 8) -> np.ndarray:
-        """Evaluate ⟦q⟧_G; returns (n, 2) numpy array of s-t pairs."""
-        plan = self.plan(q)
+    def estimate_caps(self, ranges: np.ndarray, shape) -> QueryCaps:
+        """Optimistic per-query capacities from the host index stats: the
+        class cap covers the largest LOOKUP's class list, the pair cap a
+        2x headroom over the largest single-lookup materialization.  Far
+        tighter than :func:`default_caps` for typical template queries —
+        the sticky-overflow retry (which doubles along the same power-of-
+        two ladder, so executables are shared) keeps this exact."""
+        max_classes, max_pairs = 1, 1
+        for start, length in np.asarray(ranges, np.int64).reshape(-1, 2):
+            max_classes = max(max_classes, int(length))
+            cls = self._l2c_host[start: start + length]
+            max_pairs = max(max_pairs, int(self._class_sizes[cls].sum()))
+        floor = self.index.n_vertices if _has_identity(shape) else 0
+        # never *start* above the worst-case default (the retry ladder can
+        # still climb past it if a join genuinely needs more)
+        ceiling = max(self._default_caps.pair_cap, _pow2(floor))
+        pair_cap = min(_pow2(max(64, 2 * max_pairs, floor)), ceiling)
+        return QueryCaps(class_cap=_pow2(max(16, max_classes)),
+                         pair_cap=pair_cap, join_cap=2 * pair_cap)
+
+    def lookup_ranges(self, plan) -> np.ndarray:
+        """(n_lookups, 2) int32 (start, len) rows, in plan order — the
+        per-query data streamed into the compiled plan executable."""
         seqs = plan_lookup_seqs(plan)
         ranges = np.array(
             [self.index.lookup_range(s) for s in seqs], np.int32
         ).reshape(-1, 2)
         ranges[:, 1] = ranges[:, 1] - ranges[:, 0]  # (start, len)
-        caps = caps or default_caps(self.index)
-        for _ in range(max_retries):
+        return ranges
+
+    def execute(self, q: CPQ, caps: QueryCaps | None = None,
+                max_retries: int = 8) -> np.ndarray:
+        """Evaluate ⟦q⟧_G; returns (n, 2) numpy array of s-t pairs."""
+        plan = self.plan(q)
+        ranges = self.lookup_ranges(plan)
+        shape = plan_shape(plan)
+        caps = caps or self.estimate_caps(ranges, shape)
+        for attempt in range(max_retries):
             pairs, overflow = run_plan(
-                self.index.arrays, _freeze(plan), caps, self.index.n_vertices,
+                self.index.arrays, shape, caps, self.index.n_vertices,
                 jnp.asarray(ranges),
             )
             if not bool(overflow):
                 return R.to_numpy(pairs)
-            caps = caps.doubled()
+            caps = self._escalate(caps, attempt)
         raise RuntimeError("query overflow not resolved after retries")
 
+    def _escalate(self, caps: QueryCaps, attempt: int) -> QueryCaps:
+        """Overflow-retry schedule: double, but after two failed attempts
+        from a (possibly far-too-tight) estimate jump to at least the
+        worst-case default so the ladder can't exhaust below the caps the
+        pre-estimator engine would have started from."""
+        caps = caps.doubled()
+        if attempt >= 1:
+            d = self._default_caps
+            caps = QueryCaps(max(caps.class_cap, d.class_cap),
+                             max(caps.pair_cap, d.pair_cap),
+                             max(caps.join_cap, d.join_cap))
+        return caps
 
-def _freeze(plan):
-    """Plans contain lists (mutable) — freeze to nested tuples for jit."""
-    if isinstance(plan, tuple) and plan and plan[0] == "lookup":
-        return ("lookup", tuple(tuple(s) for s in plan[1]))
-    if isinstance(plan, tuple):
-        return tuple(_freeze(p) if isinstance(p, tuple) else p for p in plan)
-    return plan
+    def execute_batch(self, queries, caps: QueryCaps | None = None,
+                      max_retries: int = 8, plans: list | None = None,
+                      min_bucket: int = 4) -> list:
+        """Evaluate many queries; returns one (n, 2) array per query, in
+        input order.
+
+        Queries are grouped by (plan *shape*, estimated caps) — labels
+        don't change the executable, and the power-of-two capacity
+        estimates quantize size-similar queries into shared buckets, so
+        a lane never pays for a much larger neighbor.  Buckets smaller
+        than ``min_bucket`` merge upward into the next-larger caps rung
+        (one dispatch beats a little lane padding).  Each group's lookup
+        ranges stack into a (batch, n_lookups, 2) array evaluated by a
+        single vmapped dispatch.  Overflow is tracked per lane: only the
+        queries whose own sticky flag tripped are retried, at doubled
+        capacities.
+
+        ``plans`` lets a caller with a plan cache (the service layer)
+        skip re-planning; must align with ``queries``."""
+        if not queries:
+            return []
+        if plans is None:
+            plans = [self.plan(q) for q in queries]
+        all_ranges = [self.lookup_ranges(p) for p in plans]
+
+        shape_groups: dict = {}
+        for i, p in enumerate(plans):
+            shape = plan_shape(p)
+            e = caps or self.estimate_caps(all_ranges[i], shape)
+            shape_groups.setdefault(shape, {}).setdefault(e, []).append(i)
+
+        work: list = []  # (shape, caps, member indices)
+        for shape, by_caps in shape_groups.items():
+            if caps is not None:
+                work.extend((shape, c, m) for c, m in by_caps.items())
+                continue
+            buckets = sorted(
+                by_caps.items(),
+                key=lambda kv: (kv[0].pair_cap, kv[0].join_cap,
+                                kv[0].class_cap))
+            cur_caps, cur_members = None, []
+            for cb, mem in buckets:
+                if cur_caps is None:
+                    cur_caps, cur_members = cb, list(mem)
+                else:
+                    cur_caps = QueryCaps(
+                        max(cur_caps.class_cap, cb.class_cap),
+                        max(cur_caps.pair_cap, cb.pair_cap),
+                        max(cur_caps.join_cap, cb.join_cap))
+                    cur_members += mem
+                if len(cur_members) >= min_bucket:
+                    work.append((shape, cur_caps, cur_members))
+                    cur_caps, cur_members = None, []
+            if cur_caps is not None:
+                # undersized largest-caps tail: keep it separate rather
+                # than inflating an already-flushed smaller bucket
+                work.append((shape, cur_caps, cur_members))
+
+        results: list = [None] * len(queries)
+        for shape, grp_caps, members in work:
+            pending = np.asarray(members, np.int64)
+            ranges = np.stack([all_ranges[i] for i in members])
+            for attempt in range(max_retries):
+                rel, overflow = run_plan_batch(
+                    self.index.arrays, shape, grp_caps,
+                    self.index.n_vertices, jnp.asarray(ranges),
+                )
+                overflow = np.asarray(overflow)
+                ok = np.nonzero(~overflow)[0]
+                if ok.size:
+                    for lane, rows in zip(ok, R.batch_to_numpy(rel, lanes=ok)):
+                        results[pending[lane]] = rows
+                if not overflow.any():
+                    break
+                pending = pending[overflow]
+                ranges = ranges[overflow]
+                grp_caps = self._escalate(grp_caps, attempt)
+            else:
+                raise RuntimeError("query overflow not resolved after retries")
+        return results

@@ -266,6 +266,33 @@ def _split_seq(seq: tuple, k: int, available) -> list:
     return out
 
 
+def freeze_plan(plan):
+    """Plans contain lists (mutable) — freeze to nested tuples so a plan
+    can key dicts/caches and serve as a jit static argument."""
+    if isinstance(plan, tuple) and plan and plan[0] == "lookup":
+        return ("lookup", tuple(tuple(s) for s in plan[1]))
+    if isinstance(plan, tuple):
+        return tuple(freeze_plan(p) if isinstance(p, tuple) else p for p in plan)
+    return plan
+
+
+def plan_shape(plan):
+    """The jit-relevant *shape* of a plan: operator structure plus the
+    segment count of each LOOKUP node (the label values themselves only
+    select which (start, len) ranges stream in as data, so queries that
+    differ only in labels share one compiled executable)."""
+    kind = plan[0]
+    if kind == "lookup":
+        return ("lookup", len(plan[1]))
+    if kind == "identity":
+        return ("identity",)
+    if kind == "conj_id":
+        return ("conj_id", plan_shape(plan[1]))
+    if kind in ("join", "conj"):
+        return (kind, plan_shape(plan[1]), plan_shape(plan[2]))
+    raise ValueError(kind)
+
+
 def plan_lookup_seqs(plan) -> list:
     """All label sequences a plan will LOOKUP (for engine buffer sizing)."""
     out = []

@@ -88,6 +88,26 @@ def valid_mask(rel: Relation) -> jax.Array:
 
 
 # ---------------------------------------------------------------------- #
+# batched (vmapped) relations: cols (batch, cap), count (batch,)
+# ---------------------------------------------------------------------- #
+
+
+def batch_to_numpy(rel: Relation, lanes=None) -> list[np.ndarray]:
+    """Lanes of a vmapped relation as host (count_j, arity) arrays —
+    all of them, or just the ``lanes`` indices.
+
+    One device->host transfer per column (not per lane)."""
+    cols = [np.asarray(c) for c in rel.cols]
+    counts = np.asarray(rel.count)
+    if lanes is None:
+        lanes = range(counts.shape[0])
+    return [
+        np.stack([c[j, : counts[j]] for c in cols], axis=1)
+        for j in lanes
+    ]
+
+
+# ---------------------------------------------------------------------- #
 # sorting / compaction / dedup / ranks
 # ---------------------------------------------------------------------- #
 

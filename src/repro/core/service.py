@@ -1,0 +1,214 @@
+"""CPQ query serving layer — continuous batching for index-backed query
+traffic.
+
+``launch/serve.py`` proved the slot/continuous-batching pattern for LM
+decoding; this module adapts it to CPQ serving on top of
+``Engine.execute_batch``:
+
+* **request queue** — ``submit`` enqueues; nothing touches the device
+  until a flush, so concurrent requests of the same plan shape ride one
+  vmapped dispatch.
+* **plan-shape buckets** — at flush time the queue is grouped by
+  :func:`repro.core.query.plan_shape` (the jit key); every bucket is one
+  device dispatch regardless of how many queries (or which labels) it
+  holds.
+* **bounded plan cache** — AST -> physical plan memoization (planning is
+  host work but repeated verbatim for recurring traffic); LRU beyond
+  ``plan_cache_size``.
+* **LRU result cache keyed by (graph epoch, query)** — repeat queries
+  are answered host-side with zero device work.  The epoch component
+  makes invalidation O(1): any graph mutation bumps the epoch and every
+  cached answer for older epochs becomes unreachable (aging out of the
+  LRU naturally).
+* **admission/flush policy** — the queue admits up to ``max_batch``
+  requests; submitting past that point flushes synchronously.  ``query``
+  is the one-shot convenience wrapper (submit + flush).
+
+A graph update (``core.maintenance`` host-mirror surgery followed by an
+index rebuild, or any fresh index) re-enters through :meth:`rebind`,
+which swaps the engine, bumps the epoch, and drops the plan cache (plans
+depend on the index's available sequences).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from .engine import Engine, QueryCaps
+from .index import CPQxIndex
+from .query import CPQ, plan_shape
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One in-flight query: filled in place when its flush completes."""
+
+    rid: int
+    query: CPQ
+    result: np.ndarray | None = None
+    done: bool = False
+    from_cache: bool = False
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    submitted: int = 0
+    served: int = 0
+    cache_hits: int = 0
+    executed: int = 0  # queries that reached the device
+    deduped: int = 0  # in-flight duplicates folded into one execution
+    flushes: int = 0
+    shape_buckets: int = 0  # distinct plan shapes across all flushes (the
+    # device may dispatch more often: caps buckets and overflow retries)
+    plan_hits: int = 0
+
+
+class QueryService:
+    """Continuous-batching front end over a CPQx/iaCPQx engine."""
+
+    def __init__(self, engine: Engine, *, max_batch: int = 64,
+                 result_cache_size: int = 1024, plan_cache_size: int = 256,
+                 caps: QueryCaps | None = None, max_retries: int = 8):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.caps = caps
+        self.max_retries = max_retries
+        self.graph_epoch = 0
+        self.stats = ServiceStats()
+        self._next_rid = 0
+        self._queue: list[QueryRequest] = []
+        self._results: OrderedDict = OrderedDict()  # (epoch, query) -> rows
+        self._result_cache_size = result_cache_size
+        self._plans: OrderedDict = OrderedDict()  # query -> physical plan
+        self._plan_cache_size = plan_cache_size
+
+    # ------------------------------------------------------------------ #
+    # request lifecycle
+    # ------------------------------------------------------------------ #
+
+    def submit(self, query: CPQ) -> QueryRequest:
+        """Enqueue a query.  Served straight from the result cache when
+        possible; otherwise it completes on the next flush (which happens
+        automatically once the queue holds ``max_batch`` requests)."""
+        req = QueryRequest(self._next_rid, query)
+        self._next_rid += 1
+        self.stats.submitted += 1
+        cached = self._cache_get(query)
+        if cached is not None:
+            req.result, req.done, req.from_cache = cached, True, True
+            self.stats.cache_hits += 1
+            self.stats.served += 1
+            return req
+        self._queue.append(req)
+        if len(self._queue) >= self.max_batch:
+            self.flush()
+        return req
+
+    def flush(self) -> list[QueryRequest]:
+        """Execute everything queued and return the completed requests.
+
+        Duplicate queries in the queue collapse onto one execution, and
+        the engine groups the distinct ones by plan shape — each shape
+        bucket is a single vmapped device dispatch."""
+        batch, self._queue = self._queue, []
+        if not batch:
+            return []
+        self.stats.flushes += 1
+        # re-check the cache (an earlier flush may have answered a dup)
+        todo: list[QueryRequest] = []
+        for req in batch:
+            cached = self._cache_get(req.query)
+            if cached is not None:
+                req.result, req.done, req.from_cache = cached, True, True
+                self.stats.cache_hits += 1
+            else:
+                todo.append(req)
+        by_query: dict = {}
+        for req in todo:
+            by_query.setdefault(req.query, []).append(req)
+        queries = list(by_query)
+        if queries:
+            plans = [self._plan(q) for q in queries]
+            try:
+                rows = self.engine.execute_batch(
+                    queries, caps=self.caps, max_retries=self.max_retries,
+                    plans=plans)
+            except Exception:
+                # nothing completed: requeue so the requests aren't lost
+                self._queue = todo + self._queue
+                raise
+            self.stats.shape_buckets += len({plan_shape(p) for p in plans})
+            self.stats.executed += len(queries)
+            self.stats.deduped += len(todo) - len(queries)
+            for q, res in zip(queries, rows):
+                self._cache_put(q, res)
+                for req in by_query[q]:
+                    req.result, req.done = res, True
+        self.stats.served += len(batch)
+        return batch
+
+    def query(self, query: CPQ) -> np.ndarray:
+        """One-shot convenience: submit + flush, returns the (n, 2) rows."""
+        req = self.submit(query)
+        if not req.done:
+            self.flush()
+        return req.result
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------ #
+    # graph mutation / epoch handling
+    # ------------------------------------------------------------------ #
+
+    def rebind(self, index: CPQxIndex) -> None:
+        """Swap in a rebuilt index (after ``core.maintenance`` mirror
+        surgery or a from-scratch rebuild).  Bumps the graph epoch so
+        every cached result keyed to the old epoch is dead, and drops the
+        plan cache (iaCPQx plans depend on available sequences)."""
+        if self._queue:
+            self.flush()  # drain against the index the requests targeted
+        self.engine = Engine(index)
+        self.bump_epoch()
+
+    def bump_epoch(self) -> None:
+        self.graph_epoch += 1
+        self._plans.clear()
+
+    # ------------------------------------------------------------------ #
+    # caches
+    # ------------------------------------------------------------------ #
+
+    def _cache_get(self, query: CPQ):
+        key = (self.graph_epoch, query)
+        if key in self._results:
+            self._results.move_to_end(key)
+            return self._results[key]
+        return None
+
+    def _cache_put(self, query: CPQ, rows: np.ndarray) -> None:
+        # the same array is handed to every requester and to future cache
+        # hits — freeze it so no caller can corrupt the shared answer
+        rows.setflags(write=False)
+        key = (self.graph_epoch, query)
+        self._results[key] = rows
+        self._results.move_to_end(key)
+        while len(self._results) > self._result_cache_size:
+            self._results.popitem(last=False)
+
+    def _plan(self, query: CPQ):
+        if query in self._plans:
+            self._plans.move_to_end(query)
+            self.stats.plan_hits += 1
+            return self._plans[query]
+        plan = self.engine.plan(query)
+        self._plans[query] = plan
+        while len(self._plans) > self._plan_cache_size:
+            self._plans.popitem(last=False)
+        return plan

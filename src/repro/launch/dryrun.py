@@ -49,10 +49,12 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         rec["skip_reason"] = shape.skip
         return rec
 
+    from repro import compat
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     cell = build_cell(spec, shape, mesh)
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
         lowered = jitted.lower(*cell.args)
         t_lower = time.time() - t0

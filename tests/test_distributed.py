@@ -28,10 +28,10 @@ class TestDistributedEngine:
     def test_distributed_join_matches_ground_truth(self):
         out = _run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
+            from repro import compat
             from repro.core import distributed as D
 
-            mesh = jax.make_mesh((8,), ("engine",), axis_types=(AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("engine",))
             rng = np.random.default_rng(0)
             A = np.unique(rng.integers(0, 30, (200, 2)).astype(np.int32), axis=0)
             B = np.unique(rng.integers(0, 30, (180, 2)).astype(np.int32), axis=0)
@@ -42,7 +42,7 @@ class TestDistributedEngine:
             b_cols = tuple(jnp.asarray(b_blocks[:, :, j]) for j in range(2))
             join = D.make_distributed_join(mesh, "engine", 8, 2, 2,
                                            bucket_cap=128, out_cap=4096)
-            with jax.sharding.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 oc, on, ovf = join(a_cols, jnp.asarray(a_counts),
                                    b_cols, jnp.asarray(b_counts))
             assert not np.asarray(ovf).any()
@@ -57,11 +57,11 @@ class TestDistributedEngine:
     def test_distributed_query_step(self):
         out = _run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType
+            from repro import compat
             from repro.core import distributed as D
             from repro.core import relational as R
 
-            mesh = jax.make_mesh((8,), ("engine",), axis_types=(AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("engine",))
             rng = np.random.default_rng(1)
             n_cls = 40
             c2p = np.unique(rng.integers(0, 25, (300, 3)).astype(np.int32), axis=0)
@@ -77,7 +77,7 @@ class TestDistributedEngine:
                 out = np.full(n, R.SENTINEL, np.int32); out[:len(x)] = x
                 return jnp.asarray(out)
             step = D.make_distributed_query_step(mesh, "engine")
-            with jax.sharding.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 (pv, pu), pc = step(padded(ca, 16), padded(cb, 16),
                                     cols[0], cols[1], cols[2],
                                     jnp.asarray(counts))
@@ -92,10 +92,11 @@ class TestDistributedEngine:
     def test_compressed_allreduce(self):
         out = _run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType, PartitionSpec as P
+            from jax.sharding import PartitionSpec as P
+            from repro import compat
             from repro.train import compress
 
-            mesh = jax.make_mesh((8,), ("dp",), axis_types=(AxisType.Auto,))
+            mesh = compat.make_mesh((8,), ("dp",))
             rng = np.random.default_rng(0)
             g_all = rng.normal(0, 1, (8, 1024)).astype(np.float32)
             state = compress.compress_init({"g": jnp.zeros(1024)})
@@ -105,11 +106,10 @@ class TestDistributedEngine:
                     {"g": g}, compress.CompressState({"g": res}), "dp")
                 return mean["g"], new_state.residual["g"]
 
-            fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                                       in_specs=(P("dp"), P("dp")),
-                                       out_specs=(P("dp"), P("dp")),
-                                       check_vma=False))
-            with jax.sharding.set_mesh(mesh):
+            fn = jax.jit(compat.shard_map(body, mesh=mesh,
+                                          in_specs=(P("dp"), P("dp")),
+                                          out_specs=(P("dp"), P("dp"))))
+            with compat.set_mesh(mesh):
                 g_in = jnp.asarray(g_all.reshape(-1))
                 res = jnp.zeros_like(g_in)
                 mean, res = fn(g_in, res)
@@ -128,14 +128,14 @@ class TestDistributedEngine:
         the production sharding rules (not just lowers)."""
         out = _run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro import compat
             from repro.configs import get_arch
             from repro.launch import shardings as S
             from repro.models import transformer as T
             from repro.train.optim import adamw_init, adamw_update
 
-            mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                                 axis_types=(AxisType.Auto,)*3)
+            mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
             cfg = get_arch("gemma2-2b").smoke
             params = T.init_params(cfg, jax.random.PRNGKey(0))
             pspecs = S.lm_param_specs(cfg, mesh)
@@ -152,7 +152,7 @@ class TestDistributedEngine:
                 np_, no, _ = adamw_update(g, o, p, 1e-3)
                 return np_, no, loss
 
-            with jax.sharding.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 jstep = jax.jit(step)
                 p2, o2, loss = jstep(params, opt, toks)
                 p3, o3, loss2 = jstep(p2, o2, toks)

@@ -5,6 +5,7 @@ k=4 coverage (the paper's full k range)."""
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_graph

@@ -3,6 +3,7 @@ semantics, partitions, indexes and query algorithms coherently."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_graph

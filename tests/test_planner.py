@@ -1,0 +1,163 @@
+"""Planner edge cases (PR 1 satellites): `_split_seq` under restricted
+``available`` sets, `freeze_plan` round-trips, `plan_shape` keys, and the
+contract that ``plan_lookup_seqs`` emits exactly the order in which the
+device executor consumes ``lookup_ranges`` rows."""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import oracle
+from repro.core.query import (
+    Edge, Identity, TEMPLATES, TEMPLATE_ARITY, _split_seq, freeze_plan,
+    instantiate_template, parse, plan_lookup_seqs, plan_query, plan_shape,
+)
+
+
+class TestSplitSeq:
+    def test_unrestricted_greedy_k_chunks(self):
+        assert _split_seq((1, 2, 3, 4, 5), 2, None) == [(1, 2), (3, 4), (5,)]
+        assert _split_seq((1, 2, 3), 3, None) == [(1, 2, 3)]
+
+    def test_restricted_available_falls_back_to_singletons(self):
+        # no 2-sequences available: every segment must be length 1
+        avail = {(1,), (2,), (3,)}
+        assert _split_seq((1, 2, 3), 2, avail) == [(1,), (2,), (3,)]
+
+    def test_restricted_available_prefers_longest_prefix(self):
+        # (1,2) present, (3,4) absent -> greedy takes (1,2) then splits
+        avail = {(1, 2), (2, 3)}
+        assert _split_seq((1, 2, 3, 4), 2, avail) == [(1, 2), (3,), (4,)]
+        # greedy is not optimal lookahead: (1,2) wins over (2,3)
+        assert _split_seq((1, 2, 3), 2, avail) == [(1, 2), (3,)]
+
+    def test_k3_restricted(self):
+        avail = {(1, 2, 3), (1, 2)}
+        assert _split_seq((1, 2, 3, 1, 2), 3, avail) == [(1, 2, 3), (1, 2)]
+        avail = {(1, 2)}
+        assert _split_seq((1, 2, 3, 1, 2), 3, avail) == [(1, 2), (3,), (1, 2)]
+
+    def test_singletons_always_available(self):
+        # length-1 segments need not be listed: L_q ⊇ L
+        assert _split_seq((7,), 2, set()) == [(7,)]
+
+
+class TestFreezePlan:
+    def _plans(self):
+        g = random_graph(21, n_max=10, m_max=25)
+        rng = np.random.default_rng(21)
+        qs = [oracle.random_cpq(rng, g, 3) for _ in range(12)]
+        qs += [instantiate_template(t, list(range(8))) for t in
+               ["C4", "TT", "SC", "ST"]]
+        return [plan_query(q, 2) for q in qs]
+
+    def test_round_trip_structure(self):
+        """Freezing only converts lists to tuples — node kinds, nesting
+        and every label survive; thawing back gives the original plan."""
+
+        def thaw(p):
+            if isinstance(p, tuple) and p and p[0] == "lookup":
+                return ("lookup", [tuple(s) for s in p[1]])
+            if isinstance(p, tuple):
+                return tuple(thaw(x) if isinstance(x, tuple) else x for x in p)
+            return p
+
+        for plan in self._plans():
+            frozen = freeze_plan(plan)
+            hash(frozen)  # must be a valid dict / jit key
+            assert freeze_plan(frozen) == frozen  # idempotent
+            assert thaw(frozen) == plan
+            assert plan_lookup_seqs(frozen) == [
+                tuple(s) for s in plan_lookup_seqs(plan)]
+
+    def test_equal_plans_freeze_equal(self):
+        q = parse("l0 . l1 . l0 & l1", None, 2)
+        assert freeze_plan(plan_query(q, 2)) == freeze_plan(plan_query(q, 2))
+
+
+class TestPlanShape:
+    def test_labels_do_not_change_shape(self):
+        a = plan_query(instantiate_template("T", [0, 0, 1]), 2)
+        b = plan_query(instantiate_template("T", [1, 1, 0]), 2)
+        assert plan_shape(a) == plan_shape(b)
+        assert hash(plan_shape(a)) == hash(plan_shape(b))
+
+    def test_lookup_counts_match_segment_lists(self):
+        for t in sorted(TEMPLATES):
+            plan = plan_query(
+                instantiate_template(t, list(range(TEMPLATE_ARITY[t]))), 2)
+
+            def check(node, shape):
+                assert node[0] == shape[0]
+                if node[0] == "lookup":
+                    assert shape[1] == len(node[1])
+                elif node[0] == "conj_id":
+                    check(node[1], shape[1])
+                elif node[0] in ("join", "conj"):
+                    check(node[1], shape[1])
+                    check(node[2], shape[2])
+
+            check(plan, plan_shape(plan))
+
+    def test_shape_differs_when_structure_differs(self):
+        shapes = {plan_shape(plan_query(
+            instantiate_template(t, list(range(8))), 2))
+            for t in ["C2", "C4", "T", "St"]}
+        assert len(shapes) == 4
+
+
+class TestLookupOrderContract:
+    """plan_lookup_seqs must enumerate LOOKUP segments in exactly the
+    order `run_plan`'s `next_range` consumes them — otherwise a query's
+    ranges feed the wrong lookups."""
+
+    @staticmethod
+    def _consumption_order(plan):
+        """Mirror of the executor's traversal in core.engine._run_plan:
+        a lookup node consumes one range per segment in list order;
+        conj/join evaluate left then right; conj_id recurses."""
+        out = []
+
+        def ev(node):
+            kind = node[0]
+            if kind == "lookup":
+                for seg in node[1]:
+                    out.append(tuple(seg))
+            elif kind == "conj_id":
+                ev(node[1])
+            elif kind in ("join", "conj"):
+                ev(node[1])
+                ev(node[2])
+
+        ev(plan)
+        return out
+
+    def test_templates(self):
+        for t in sorted(TEMPLATES):
+            plan = plan_query(
+                instantiate_template(t, list(range(TEMPLATE_ARITY[t]))), 2)
+            assert [tuple(s) for s in plan_lookup_seqs(plan)] == \
+                self._consumption_order(plan)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_queries_and_restricted_availability(self, seed):
+        g = random_graph(seed + 40, n_max=12, m_max=30)
+        rng = np.random.default_rng(seed)
+        # a restricted availability set forces interesting splits
+        avail = {(int(a), int(b)) for a, b in
+                 rng.integers(0, 2 * g.n_labels, (3, 2))}
+        for _ in range(10):
+            q = oracle.random_cpq(rng, g, 3)
+            for av in (None, avail):
+                plan = plan_query(q, 2, available=av)
+                if isinstance(q, Identity):
+                    continue
+                assert [tuple(s) for s in plan_lookup_seqs(plan)] == \
+                    self._consumption_order(plan)
+
+    def test_join_of_sub_and_lookup(self):
+        # (a & b) . c . d: ranges must arrive as [a, b, c, d]
+        q = parse("(l0 & l1) . l1 . l0", None, 2)
+        plan = plan_query(q, 2)
+        assert plan_lookup_seqs(plan) == [(0,), (1,), (1, 0)]
+        assert self._consumption_order(plan) == [(0,), (1,), (1, 0)]

@@ -1,0 +1,172 @@
+"""QueryService (serving layer) tests: differential correctness through
+the queue/flush path, plan-shape bucketing, in-flight dedup, the LRU
+result cache, and epoch-keyed invalidation under graph maintenance."""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import TEMPLATES, TEMPLATE_ARITY, instantiate_template
+from repro.core.service import QueryService
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in arr.tolist()}
+
+
+def _workload(g, rng, names, n_per=1):
+    out = []
+    for name in names:
+        for _ in range(n_per):
+            labels = rng.integers(0, g.alphabet_size,
+                                  TEMPLATE_ARITY[name]).tolist()
+            out.append(instantiate_template(name, labels))
+    return out
+
+
+@pytest.fixture()
+def svc(ex_graph):
+    return QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=64)
+
+
+class TestServiceDifferential:
+    def test_all_templates_through_the_queue(self, ex_graph, svc):
+        g = ex_graph
+        rng = np.random.default_rng(2)
+        qs = _workload(g, rng, sorted(TEMPLATES), n_per=2)
+        reqs = [svc.submit(q) for q in qs]
+        assert svc.pending == len(qs)
+        done = svc.flush()
+        assert len(done) == len(qs) and svc.pending == 0
+        for q, r in zip(qs, reqs):
+            assert r.done
+            assert _rows(r.result) == oracle.cpq_eval(g, q), q
+        # 12 templates collapse to fewer than 12 plan-shape buckets
+        assert 0 < svc.stats.shape_buckets <= len(qs)
+
+    def test_random_graph(self):
+        g = random_graph(9, n_max=14, m_max=35)
+        svc = QueryService(Engine(cindex.build(g, 2)), max_batch=16)
+        rng = np.random.default_rng(9)
+        qs = [oracle.random_cpq(rng, g, 2) for _ in range(5)]
+        for q in qs:
+            assert _rows(svc.query(q)) == oracle.cpq_eval(g, q), q
+
+
+class TestQueueAndCache:
+    def test_auto_flush_at_max_batch(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=3)
+        qs = _workload(ex_graph, np.random.default_rng(4),
+                       ["C2", "T", "S", "C4"])
+        reqs = [svc.submit(q) for q in qs]
+        assert all(r.done for r in reqs[:3])  # flushed on admission limit
+        assert not reqs[3].done and svc.pending == 1
+        svc.flush()
+        assert reqs[3].done
+
+    def test_duplicates_fold_into_one_execution(self, ex_graph, svc):
+        q = instantiate_template("T", [0, 0, 1])
+        reqs = [svc.submit(q) for _ in range(4)]
+        svc.flush()
+        gt = oracle.cpq_eval(ex_graph, q)
+        for r in reqs:
+            assert _rows(r.result) == gt
+        assert svc.stats.executed == 1
+        assert svc.stats.deduped == 3
+
+    def test_repeat_query_served_from_cache(self, ex_graph, svc):
+        q = instantiate_template("C2", [0, 1])
+        first = svc.submit(q)
+        svc.flush()
+        again = svc.submit(q)
+        assert again.done and again.from_cache
+        assert _rows(again.result) == _rows(first.result)
+        assert svc.stats.cache_hits == 1
+        # cached answers bypass the device entirely
+        assert svc.stats.executed == 1
+
+    def test_failed_flush_requeues_requests(self, ex_graph):
+        """If the engine raises mid-flush (retry exhaustion), queued
+        requests must survive for the next flush, not vanish."""
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=64,
+                           max_retries=0)
+        q = instantiate_template("C2", [0, 0])
+        req = svc.submit(q)
+        with pytest.raises(RuntimeError):
+            svc.flush()
+        assert svc.pending == 1 and not req.done
+        svc.max_retries = 8
+        svc.flush()
+        assert req.done
+        assert _rows(req.result) == oracle.cpq_eval(ex_graph, q)
+
+    def test_lru_result_cache_is_bounded(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=64,
+                           result_cache_size=2)
+        qs = _workload(ex_graph, np.random.default_rng(6),
+                       ["C2", "T", "S"])
+        for q in qs:
+            svc.query(q)
+        assert len(svc._results) <= 2
+        # oldest entry evicted -> re-submitting executes again
+        r = svc.submit(qs[0])
+        assert not (r.done and r.from_cache)
+
+
+class TestEpochInvalidation:
+    def test_maintenance_mutation_invalidates_result_cache(self, ex_graph):
+        """Mutate the graph via core.maintenance, rebuild, rebind: the
+        service must stop serving pre-mutation answers (epoch key) and
+        agree with the oracle on the new graph."""
+        g = ex_graph
+        svc = QueryService(Engine(cindex.build(g, 2)), max_batch=8)
+        q = instantiate_template("C2", [0, 0])
+
+        before = _rows(svc.query(q))
+        assert before == oracle.cpq_eval(g, q)
+        hit = svc.submit(q)
+        assert hit.from_cache  # warmed
+
+        m = MaintainableIndex.build(g, 2)
+        m.insert_edge(2, 3, 0)  # zoe -> tim: adds the f.f path zoe->tim->sue
+        assert oracle.cpq_eval(m.g, q) != before  # the mutation matters
+
+        old_epoch = svc.graph_epoch
+        svc.rebind(cindex.build(m.g, 2))
+        assert svc.graph_epoch == old_epoch + 1
+
+        fresh = svc.submit(q)
+        assert not fresh.from_cache  # epoch key killed the cached answer
+        svc.flush()
+        assert _rows(fresh.result) == oracle.cpq_eval(m.g, q)
+        # and the post-mutation answer is itself cacheable
+        warm = svc.submit(q)
+        assert warm.from_cache
+        assert _rows(warm.result) == oracle.cpq_eval(m.g, q)
+
+    def test_bump_epoch_alone_invalidates(self, ex_graph, svc):
+        q = instantiate_template("T", [0, 1, 0])
+        svc.query(q)
+        assert svc.submit(q).from_cache
+        svc.bump_epoch()
+        assert not svc.submit(q).from_cache
+        svc.flush()
+
+    def test_rebind_drains_pending_against_old_index(self, ex_graph):
+        """Requests submitted before a rebind were planned against the
+        old graph; rebind flushes them first so they complete (and
+        against the index they targeted)."""
+        g = ex_graph
+        svc = QueryService(Engine(cindex.build(g, 2)), max_batch=64)
+        q = instantiate_template("C2", [0, 0])
+        req = svc.submit(q)
+        gt_old = oracle.cpq_eval(g, q)
+
+        m = MaintainableIndex.build(g, 2)
+        m.insert_edge(1, 3, 0)
+        svc.rebind(cindex.build(m.g, 2))
+        assert req.done and _rows(req.result) == gt_old
