@@ -1,18 +1,116 @@
 """Paper Tables V/VI/VII: maintenance — edge insert/delete and interest
-insert/delete times, plus the index-growth ratio under lazy updates."""
+insert/delete times, plus the index-growth ratio under lazy updates.
+
+PR-2 extension: **update→queryable latency** — after a batch of updates,
+how long until the device can answer queries on the new graph?  Two
+paths are timed, gated on bit-identical answers:
+
+  flush    ``MaintainableIndex.apply_updates`` (one affected-pair union
+           per batch) + ``flush`` (mirror→device re-serialization,
+           preserving the lazy partition) + ``Engine.rebind``
+  rebuild  the same mirror surgery + a from-scratch device build
+           (``cindex.build`` — path enumeration + bisimulation) + rebind
+
+    PYTHONPATH=src python -m benchmarks.bench_update [--smoke]
+"""
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.engine import Engine
 from repro.core.maintenance import MaintainableIndex
+from repro.core.query import TEMPLATE_ARITY, instantiate_template
 
 from .bench_query import interests_for
 from .common import DATASETS, emit, timeit
 
 
-def main() -> None:
-    for ds in ["robots-like", "gmark-small"]:
+def _update_batch(g, rng, n_ops: int) -> list:
+    """A realistic mixed batch: inserts, deletes of existing edges, and
+    relabels."""
+    base = g._base_edges()
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.5 or base.shape[0] == 0:
+            ops.append(("insert_edge", int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_labels))))
+        elif roll < 0.8:
+            e = base[int(rng.integers(0, base.shape[0]))]
+            ops.append(("delete_edge", int(e[0]), int(e[1]), int(e[2])))
+        else:
+            e = base[int(rng.integers(0, base.shape[0]))]
+            ops.append(("change_label", int(e[0]), int(e[1]), int(e[2]),
+                        (int(e[2]) + 1) % g.n_labels))
+    return ops
+
+
+def _probe_queries(g, rng, n: int = 6) -> list:
+    names = ["C2", "T", "C2i", "S"]
+    out = []
+    present = np.unique(g.lbl)
+    for i in range(n):
+        name = names[i % len(names)]
+        labels = rng.choice(present, TEMPLATE_ARITY[name]).tolist()
+        out.append(instantiate_template(name, labels))
+    return out
+
+
+def bench_update_to_queryable(ds: str, n_ops: int, rounds: int) -> bool:
+    """Time apply+flush+rebind vs apply+rebuild+rebind per update batch.
+    Returns True iff flush beat rebuild on every timed round AND both
+    paths (and the host oracle) agreed on every probe query."""
+    g = DATASETS[ds]()
+    rng = np.random.default_rng(7)
+    mi = MaintainableIndex.build(g, 2)
+    engine = Engine(mi.flush())  # warm: executables + flush caps
+    ok = True
+    for r in range(rounds):
+        batch = _update_batch(mi.g, rng, n_ops)
+        built = {}  # capture the timed indexes for the answer gate below
+
+        def flush_and_rebind():
+            built["flushed"] = mi.flush()
+            engine.rebind(built["flushed"])
+
+        def rebuild_and_rebind():
+            built["rebuilt"] = cindex.build(mi.g, 2)
+            engine.rebind(built["rebuilt"])
+
+        t0 = timeit(lambda: mi.apply_updates(batch), warmup=0, iters=1)
+        t_flush = timeit(flush_and_rebind, warmup=0, iters=1)
+        t_rebuild = timeit(rebuild_and_rebind, warmup=0, iters=1)
+        # gate: flushed arrays, rebuilt arrays and the host oracle agree
+        flushed, rebuilt = built["flushed"], built["rebuilt"]
+        for q in _probe_queries(mi.g, rng):
+            engine.rebind(flushed)
+            a = {tuple(x) for x in engine.execute(q).tolist()}
+            engine.rebind(rebuilt)
+            b = {tuple(x) for x in engine.execute(q).tolist()}
+            truth = oracle.cpq_eval(mi.g, q)
+            assert a == truth, f"flush path diverged from oracle on {q}"
+            assert b == truth, f"rebuild path diverged from oracle on {q}"
+        engine.rebind(flushed)
+        speedup = (t0 + t_rebuild) / max(t0 + t_flush, 1e-9)
+        ok = ok and t_flush < t_rebuild
+        emit(f"update/{ds}/batch{n_ops}/round{r}/apply", t0,
+             f"splits={mi.n_splits}")
+        emit(f"update/{ds}/batch{n_ops}/round{r}/flush", t_flush, "")
+        emit(f"update/{ds}/batch{n_ops}/round{r}/rebuild", t_rebuild,
+             f"queryable_speedup={speedup:.2f}x")
+    emit(f"update/{ds}/batch{n_ops}/acceptance", 0.0,
+         f"flush_faster_than_rebuild={'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def bench_paper_tables(datasets: list, iters: int) -> None:
+    for ds in datasets:
         g = DATASETS[ds]()
         ints = interests_for(g)
         rng = np.random.default_rng(0)
@@ -28,7 +126,7 @@ def main() -> None:
             except Exception:
                 pass
 
-        us = timeit(del_edge, warmup=0, iters=5)
+        us = timeit(del_edge, warmup=0, iters=iters)
         emit(f"table5/{ds}/edge_deletion", us, "")
 
         def ins_edge():
@@ -36,7 +134,7 @@ def main() -> None:
                            int(rng.integers(0, g.n_vertices)),
                            int(rng.integers(0, g.n_labels)))
 
-        us = timeit(ins_edge, warmup=0, iters=5)
+        us = timeit(ins_edge, warmup=0, iters=iters)
         emit(f"table5/{ds}/edge_insertion", us, "")
         growth = sum(mi.size_entries()) / max(size0, 1)
         emit(f"table7/{ds}/size_ratio_after_10_updates", growth * 1000,
@@ -47,6 +145,20 @@ def main() -> None:
         emit(f"table6/{ds}/interest_deletion", us, "")
         us = timeit(lambda: mia.insert_interest(ints[0]), warmup=0, iters=1)
         emit(f"table6/{ds}/interest_insertion", us, "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph, minimal rounds (CI)")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        bench_paper_tables(["example"], iters=2)
+        bench_update_to_queryable("example", n_ops=4, rounds=1)
+        return
+    bench_paper_tables(["robots-like", "gmark-small"], iters=5)
+    bench_update_to_queryable("gmark-small", n_ops=16, rounds=3)
 
 
 if __name__ == "__main__":

@@ -118,6 +118,46 @@ def estimate_build_caps(g: LabeledGraph, k: int, slack: float = 1.0) -> BuildCap
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class FlushCaps:
+    """Capacities for re-serializing a lazily-updated host mirror into
+    device arrays (``core.maintenance.MaintainableIndex.flush``).
+
+    Unlike :class:`BuildCaps` (sized for the whole device build pipeline,
+    including intermediate join relations), a flush only materializes the
+    final two inverted maps, so three capacities suffice:
+
+    pair_cap : |P^{<=k}| rows (pair table, c2p table, class CSR)
+    l2c_cap  : distinct (seq, class) entries
+    seq_cap  : distinct label sequences
+    """
+
+    pair_cap: int
+    l2c_cap: int
+    seq_cap: int
+
+    @staticmethod
+    def for_sizes(n_pairs: int, n_l2c: int, n_seqs: int) -> "FlushCaps":
+        return FlushCaps(_round_pow2(n_pairs), _round_pow2(n_l2c),
+                         _round_pow2(n_seqs))
+
+    def grown_for(self, n_pairs: int, n_l2c: int, n_seqs: int) -> "FlushCaps":
+        """Geometric growth: double each capacity until the mirror fits
+        (capacities never shrink, so repeated flushes of a growing mirror
+        reuse the same array shapes — and the same jit executables —
+        until a doubling is genuinely needed)."""
+
+        def grow(cap: int, need: int) -> int:
+            while cap < need:
+                cap *= 2
+            return cap
+
+        out = FlushCaps(grow(self.pair_cap, n_pairs),
+                        grow(self.l2c_cap, n_l2c),
+                        grow(self.seq_cap, n_seqs))
+        return self if out == self else out
+
+
 def graph_stats(g: LabeledGraph, k: int) -> dict:
     """|P^{<=k}|, gamma (avg distinct seqs per pair), degree stats —
     the quantities of paper Sec. III-A / Table IV."""

@@ -220,6 +220,15 @@ class Engine:
     """Query engine bound to a built index."""
 
     def __init__(self, index: CPQxIndex):
+        self.rebind(index)
+
+    def rebind(self, index: CPQxIndex) -> None:
+        """Swap in a new index (a maintenance flush or a rebuild) in
+        place: re-pulls the host-side estimator mirrors and the default
+        caps.  Compiled executables are keyed on (plan shape, caps,
+        n_vertices) — not on the index identity — so traffic after a
+        rebind keeps hitting the same jit cache as long as the flushed
+        arrays keep their capacities."""
         self.index = index
         self._available = index.available_seqs() if index.interests is not None else None
         # host mirrors for the adaptive capacity estimator: per-class pair

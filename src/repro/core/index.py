@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ import numpy as np
 
 from . import relational as R
 from .bisim import path_partition
-from .capacity import BuildCaps, estimate_build_caps
+from .capacity import BuildCaps, FlushCaps, estimate_build_caps
 from .graph import LabeledGraph
 from .paths import DeviceGraph, device_graph, enumerate_path_levels, seq_rows_of_levels, _recap
 
@@ -155,7 +155,7 @@ class CPQxIndex:
     n_vertices: int
     arrays: DeviceIndexArrays
     seq_ranges: dict
-    caps: BuildCaps
+    caps: BuildCaps | FlushCaps
     interests: frozenset | None = None  # None => full CPQx
 
     @property
@@ -187,6 +187,101 @@ def _pull_seq_ranges(arrays: DeviceIndexArrays, k: int) -> dict:
         seq = tuple(int(x) for x in table[i] if x >= 0)
         out[seq] = (int(starts[i]), int(ends[i]))
     return out
+
+
+def from_host_mirror(
+    k: int,
+    n_vertices: int,
+    l2c: Mapping,
+    c2p: Mapping,
+    cyclic: Mapping,
+    caps: FlushCaps | None = None,
+    interests: frozenset | None = None,
+) -> CPQxIndex:
+    """Serialize a host-form index (the ``oracle.Index`` dict triple) into
+    :class:`DeviceIndexArrays` — the mirror→device half of lazy maintenance
+    (Sec. IV-E).
+
+    Class ids are *renumbered densely* (in ascending old-id order, so every
+    sorted class list stays sorted under the order-preserving remap) but the
+    partition itself is untouched: lazily-split classes are serialized
+    exactly as the mirror holds them, never merged back.  ``caps`` lets a
+    caller reuse (and geometrically grow) the capacities of a previous
+    flush so array shapes — and the jit executables keyed on them — stay
+    stable while the mirror fits.
+    """
+    old_ids = sorted(c for c, ps in c2p.items() if ps)
+    remap = {c: i for i, c in enumerate(old_ids)}
+    n_classes = len(old_ids)
+
+    pair_rows = np.array(
+        [(v, u, remap[c]) for c in old_ids for (v, u) in c2p[c]],
+        np.int64,
+    ).reshape(-1, 3)
+    n_pairs = pair_rows.shape[0]
+    seqs = sorted(tuple(s) for s in l2c)
+    n_l2c = sum(len(l2c[s]) for s in seqs)
+    caps = (caps or FlushCaps.for_sizes(n_pairs, n_l2c, len(seqs)))
+    caps = caps.grown_for(n_pairs, n_l2c, len(seqs))
+
+    def pad_col(values, cap, fill=int(R.SENTINEL)):
+        buf = np.full(cap, fill, np.int32)
+        buf[: len(values)] = values
+        return buf
+
+    # ---------------- pair table, sorted by (v, u) ---------------- #
+    byp = pair_rows[np.lexsort((pair_rows[:, 1], pair_rows[:, 0]))]
+    pair_v = pad_col(byp[:, 0], caps.pair_cap)
+    pair_u = pad_col(byp[:, 1], caps.pair_cap)
+    pair_cls = pad_col(byp[:, 2], caps.pair_cap)
+
+    # ------------- I_c2p: sorted by (class, v, u) + CSR ------------- #
+    byc = pair_rows[np.lexsort((pair_rows[:, 1], pair_rows[:, 0], pair_rows[:, 2]))]
+    c2p_cls = pad_col(byc[:, 2], caps.pair_cap)
+    c2p_v = pad_col(byc[:, 0], caps.pair_cap)
+    c2p_u = pad_col(byc[:, 1], caps.pair_cap)
+    class_starts = np.searchsorted(
+        c2p_cls.astype(np.int64), np.arange(caps.pair_cap + 1), side="left"
+    ).astype(np.int32)
+    class_cyclic = np.zeros(caps.pair_cap, np.int32)
+    for c in old_ids:
+        class_cyclic[remap[c]] = 1 if cyclic[c] else 0
+
+    # ------------- I_l2c: seq table + per-seq class ranges ------------- #
+    seq_table = np.full((caps.seq_cap, k), -1, np.int32)
+    seq_starts = np.zeros(caps.seq_cap, np.int32)
+    seq_ends = np.zeros(caps.seq_cap, np.int32)
+    l2c_flat: list[int] = []
+    seq_ranges: dict = {}
+    for i, s in enumerate(seqs):
+        seq_table[i, : len(s)] = s
+        start = len(l2c_flat)
+        l2c_flat.extend(sorted(remap[c] for c in l2c[s]))
+        seq_starts[i] = start
+        seq_ends[i] = len(l2c_flat)
+        seq_ranges[s] = (start, len(l2c_flat))
+    l2c_cls = pad_col(l2c_flat, caps.l2c_cap)
+
+    arrays = DeviceIndexArrays(
+        pair_v=jnp.asarray(pair_v), pair_u=jnp.asarray(pair_u),
+        pair_cls=jnp.asarray(pair_cls),
+        pair_count=jnp.asarray(n_pairs, R.I32),
+        c2p_cls=jnp.asarray(c2p_cls), c2p_v=jnp.asarray(c2p_v),
+        c2p_u=jnp.asarray(c2p_u),
+        class_starts=jnp.asarray(class_starts),
+        class_cyclic=jnp.asarray(class_cyclic),
+        n_classes=jnp.asarray(n_classes, R.I32),
+        seq_table=jnp.asarray(seq_table),
+        seq_count=jnp.asarray(len(seqs), R.I32),
+        seq_starts=jnp.asarray(seq_starts), seq_ends=jnp.asarray(seq_ends),
+        l2c_cls=jnp.asarray(l2c_cls),
+        l2c_count=jnp.asarray(n_l2c, R.I32),
+        overflow=jnp.asarray(False),
+    )
+    return CPQxIndex(
+        k=k, n_vertices=n_vertices, arrays=arrays, seq_ranges=seq_ranges,
+        caps=caps, interests=interests,
+    )
 
 
 def build(g: LabeledGraph, k: int, caps: BuildCaps | None = None) -> CPQxIndex:

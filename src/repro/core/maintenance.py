@@ -11,9 +11,15 @@ Adaptation note (DESIGN.md §2): the C++ artifact splices sorted vectors
 in place.  On TPU, in-place scatter into sorted device arrays is not
 idiomatic, so updates are applied to the host mirror (cheap dict/list
 surgery, the same asymptotics as the paper: O(d·|P_u| + |P_u| log |P^k|))
-and the device arrays are refreshed by re-serialization, either per batch
-(``flush``) or lazily before the next device query.  Host-side queries
-(oracle evaluator) see updates immediately.
+and the device arrays are refreshed by re-serialization: ``flush``
+re-serializes the lazily-split mirror into :class:`DeviceIndexArrays`
+(``core.index.from_host_mirror``), preserving the lazy partition — a
+fresh build would *merge* split classes — and reusing/geometrically
+growing the previous flush's capacities so array shapes stay stable.
+``apply_updates`` applies a whole batch with ONE union-of-affected-pairs
+computation (the k-hop neighborhood BFS is amortized across the batch:
+one adjacency build per graph version instead of one per edge).
+Host-side queries (oracle evaluator) see updates immediately.
 
 Label-sequence interest updates (Sec. V-C) are supported on iaCPQx
 mirrors: deletion drops the ``l2c`` entry (classes stay split — lazy);
@@ -26,9 +32,7 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
-import numpy as np
-
-from .graph import LabeledGraph, inverse_label
+from .graph import LabeledGraph
 from . import oracle
 from .oracle import Index
 
@@ -41,6 +45,7 @@ class MaintainableIndex:
     index: Index
     next_class: int = 0
     n_splits: int = 0  # lazily-split classes since last rebuild (Table VII)
+    _flush_caps: object = None  # FlushCaps of the last flush (grown, never shrunk)
 
     @staticmethod
     def build(g: LabeledGraph, k: int, interests=None) -> "MaintainableIndex":
@@ -52,26 +57,33 @@ class MaintainableIndex:
     # ------------------------------------------------------------------ #
     # neighborhood of an update — the pairs P_u of Thm. 4.6
     # ------------------------------------------------------------------ #
-    def _affected_pairs(self, v: int, u: int) -> set:
-        """All s-t pairs whose <=k-length path sets can include an edge
-        between v and u (either direction, any label): sources reaching v
-        (or u) within k-1 hops x targets reachable from u (or v) within
-        k-1 hops, with total length <= k - 1."""
-        k = self.index.k
-        g = self.g
+    @staticmethod
+    def _adjacency(g: LabeledGraph) -> tuple:
+        """(fwd, bwd) adjacency dicts — built once per graph version and
+        shared by every ball expansion in a batch."""
         fwd: dict[int, list] = defaultdict(list)
         bwd: dict[int, list] = defaultdict(list)
         for s, d in zip(g.src, g.dst):
             fwd[int(s)].append(int(d))
             bwd[int(d)].append(int(s))
+        return fwd, bwd
 
-        def ball(start: int, adj, radius: int) -> dict[int, int]:
+    def _affected_pairs(self, v: int, u: int, g: LabeledGraph | None = None,
+                        adj: tuple | None = None) -> set:
+        """All s-t pairs whose <=k-length path sets can include an edge
+        between v and u (either direction, any label): sources reaching v
+        (or u) within k-1 hops x targets reachable from u (or v) within
+        k-1 hops, with total length <= k - 1."""
+        k = self.index.k
+        fwd, bwd = adj if adj is not None else self._adjacency(g or self.g)
+
+        def ball(start: int, a, radius: int) -> dict[int, int]:
             dist = {start: 0}
             frontier = [start]
             for r in range(1, radius + 1):
                 nxt = []
                 for x in frontier:
-                    for y in adj[x]:
+                    for y in a[x]:
                         if y not in dist:
                             dist[y] = r
                             nxt.append(y)
@@ -139,34 +151,91 @@ class MaintainableIndex:
                 idx.l2c[s] = sorted(set(idx.l2c[s]) | {c})
 
     # ------------------------------------------------------------------ #
+    # batched update application — one affected-pair union per batch
+    # ------------------------------------------------------------------ #
+    def apply_updates(self, updates: list) -> set:
+        """Apply a whole batch of updates with ONE union-of-affected-pairs
+        computation and ONE re-insertion pass.
+
+        ``updates`` is a list of op tuples::
+
+            ("insert_edge",  v, u, base_label)
+            ("delete_edge",  v, u, base_label)
+            ("change_label", v, u, old_label, new_label)
+            ("delete_vertex", x)
+            ("insert_vertex", [(v, u, base_label), ...])
+
+        The batch is replayed on the host edge *set* to find the net
+        removed/added edges; affected pairs are the union of the k-hop
+        neighborhood balls of removed edges in the OLD graph (pairs that
+        may lose sequences) and of added edges in the NEW graph (pairs
+        that may gain them).  Because removing edges only shrinks balls,
+        this union covers every pair a per-edge sequential application
+        would touch whose signature can actually change — same
+        correctness (Prop. 4.2), one BFS adjacency build per graph
+        version instead of one per edge.  Returns the affected pair set.
+        """
+        old_base = {tuple(map(int, e)) for e in self.g._base_edges()}
+        base = set(old_base)
+        for op in updates:
+            kind = op[0]
+            if kind == "insert_edge":
+                base.add((int(op[1]), int(op[2]), int(op[3])))
+            elif kind == "delete_edge":
+                base.discard((int(op[1]), int(op[2]), int(op[3])))
+            elif kind == "change_label":
+                base.discard((int(op[1]), int(op[2]), int(op[3])))
+                base.add((int(op[1]), int(op[2]), int(op[4])))
+            elif kind == "delete_vertex":
+                x = int(op[1])
+                base = {e for e in base if x not in e[:2]}
+            elif kind == "insert_vertex":
+                base |= {tuple(map(int, e)) for e in op[1]}
+            else:
+                raise ValueError(f"unknown update op {kind!r}")
+
+        removed = old_base - base
+        added = base - old_base
+        if not removed and not added:
+            return set()  # net no-op (e.g. deleting an isolated vertex)
+
+        affected: set = set()
+        if removed:
+            old_adj = self._adjacency(self.g)
+            for (v, u) in {e[:2] for e in removed}:
+                affected |= self._affected_pairs(v, u, adj=old_adj)
+        new_g = LabeledGraph.from_edges(
+            self.g.n_vertices, self.g.n_labels, sorted(base),
+            self.g.label_names,
+        )
+        if added:
+            new_adj = self._adjacency(new_g)
+            for (v, u) in {e[:2] for e in added}:
+                affected |= self._affected_pairs(v, u, g=new_g, adj=new_adj)
+        self.g = new_g
+        self._reinsert(affected, new_g)
+        return affected
+
+    # ------------------------------------------------------------------ #
     # the five update operations of Sec. IV-E / V-C
     # ------------------------------------------------------------------ #
     def delete_edge(self, v: int, u: int, base_label: int) -> None:
-        affected = self._affected_pairs(v, u)
-        self.g = self.g.with_edges_removed([(v, u, base_label)])
-        self._reinsert(affected, self.g)
+        self.apply_updates([("delete_edge", v, u, base_label)])
 
     def insert_edge(self, v: int, u: int, base_label: int) -> None:
-        self.g = self.g.with_edges_added([(v, u, base_label)])
-        affected = self._affected_pairs(v, u)
-        self._reinsert(affected, self.g)
+        self.apply_updates([("insert_edge", v, u, base_label)])
 
     def change_label(self, v: int, u: int, old_label: int, new_label: int) -> None:
-        self.delete_edge(v, u, old_label)
-        self.insert_edge(v, u, new_label)
+        self.apply_updates([("change_label", v, u, old_label, new_label)])
 
     def delete_vertex(self, x: int) -> None:
-        doomed = [
-            (int(s), int(d), int(l))
-            for s, d, l in zip(self.g.src, self.g.dst, self.g.lbl)
-            if l < self.g.n_labels and (int(s) == x or int(d) == x)
-        ]
-        for (s, d, l) in doomed:
-            self.delete_edge(s, d, l)
+        """Remove a vertex and its incident edges; a vertex with no
+        incident edges is a no-op (``apply_updates`` sees an empty net
+        change and skips re-insertion entirely)."""
+        self.apply_updates([("delete_vertex", x)])
 
     def insert_vertex(self, edges: list) -> None:
-        for (s, d, l) in edges:
-            self.insert_edge(s, d, l)
+        self.apply_updates([("insert_vertex", list(edges))])
 
     def delete_interest(self, seq: tuple) -> None:
         """Sec. V-C: drop one interest sequence — just remove the l2c entry
@@ -194,15 +263,29 @@ class MaintainableIndex:
     def size_entries(self) -> tuple[int, int]:
         return self.index.size_entries()
 
-    def flush(self):
+    def flush(self, caps=None):
         """Re-serialize the mirror into device arrays (a fresh CPQxIndex
         build from the current graph would *merge* split classes; flushing
-        keeps the lazy partition — it only refreshes the device image)."""
-        from . import index as dindex  # lazy import; host mirror is primary
-        raise NotImplementedError(
-            "device refresh from a lazily-updated mirror is exercised via "
-            "rebuild in benchmarks; see bench_update.py"
+        keeps the lazy partition — it only refreshes the device image).
+
+        Returns a :class:`repro.core.index.CPQxIndex` ready for
+        ``Engine``/``Engine.rebind``.  Capacities are remembered across
+        flushes and grown geometrically when the mirror outgrows them
+        (``FlushCaps.grown_for``), so repeated flushes keep stable array
+        shapes — and stable jit keys — until a doubling is needed."""
+        from . import index as dindex  # lazy: keep this module jax-free
+
+        flushed = dindex.from_host_mirror(
+            k=self.index.k,
+            n_vertices=self.g.n_vertices,
+            l2c=self.index.l2c,
+            c2p=self.index.c2p,
+            cyclic=self.index.cyclic,
+            caps=caps if caps is not None else self._flush_caps,
+            interests=self.index.interests,
         )
+        self._flush_caps = flushed.caps
+        return flushed
 
 
 def _local_signatures(g: LabeledGraph, pairs: set, k: int) -> dict:

@@ -24,10 +24,22 @@ decoding; this module adapts it to CPQ serving on top of
   requests; submitting past that point flushes synchronously.  ``query``
   is the one-shot convenience wrapper (submit + flush).
 
-A graph update (``core.maintenance`` host-mirror surgery followed by an
-index rebuild, or any fresh index) re-enters through :meth:`rebind`,
-which swaps the engine, bumps the epoch, and drops the plan cache (plans
-depend on the index's available sequences).
+A graph update re-enters the service two ways:
+
+* **rebind path** — any fresh :class:`CPQxIndex` (a from-scratch rebuild
+  or a maintenance flush) through :meth:`rebind`, which swaps the index
+  into the engine, bumps the epoch, and drops the plan cache (plans
+  depend on the index's available sequences).
+* **write path** — :meth:`apply_updates` on a service constructed with a
+  ``maintainer`` (:class:`repro.core.maintenance.MaintainableIndex`).
+  Updates are *queued*, not applied: the epoch bumps immediately (stale
+  cached answers become unreachable in O(1)) but the host-mirror surgery
+  and the mirror→device flush are deferred and **coalesced** — the next
+  query drain applies every queued update as ONE
+  ``MaintainableIndex.apply_updates`` batch (one affected-pair union BFS)
+  followed by ONE flush/rebind.  Reads submitted before a write are
+  drained first, so the service serves a strict serializable history:
+  every query sees exactly the writes applied before it was submitted.
 """
 
 from __future__ import annotations
@@ -40,6 +52,10 @@ import numpy as np
 from .engine import Engine, QueryCaps
 from .index import CPQxIndex
 from .query import CPQ, plan_shape
+
+
+_UPDATE_OPS = frozenset({"insert_edge", "delete_edge", "change_label",
+                         "delete_vertex", "insert_vertex"})
 
 
 @dataclasses.dataclass
@@ -64,6 +80,8 @@ class ServiceStats:
     shape_buckets: int = 0  # distinct plan shapes across all flushes (the
     # device may dispatch more often: caps buckets and overflow retries)
     plan_hits: int = 0
+    updates_applied: int = 0  # individual update ops through apply_updates
+    update_batches: int = 0  # coalesced mirror/device maintenance rounds
 
 
 class QueryService:
@@ -71,7 +89,8 @@ class QueryService:
 
     def __init__(self, engine: Engine, *, max_batch: int = 64,
                  result_cache_size: int = 1024, plan_cache_size: int = 256,
-                 caps: QueryCaps | None = None, max_retries: int = 8):
+                 caps: QueryCaps | None = None, max_retries: int = 8,
+                 maintainer=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
@@ -80,8 +99,10 @@ class QueryService:
         self.max_retries = max_retries
         self.graph_epoch = 0
         self.stats = ServiceStats()
+        self.maintainer = maintainer  # MaintainableIndex enabling the write path
         self._next_rid = 0
         self._queue: list[QueryRequest] = []
+        self._pending_updates: list = []
         self._results: OrderedDict = OrderedDict()  # (epoch, query) -> rows
         self._result_cache_size = result_cache_size
         self._plans: OrderedDict = OrderedDict()  # query -> physical plan
@@ -114,7 +135,10 @@ class QueryService:
 
         Duplicate queries in the queue collapse onto one execution, and
         the engine groups the distinct ones by plan shape — each shape
-        bucket is a single vmapped device dispatch."""
+        bucket is a single vmapped device dispatch.  Queued graph updates
+        (``apply_updates``) are drained first, so every query in this
+        flush is answered on the post-update index."""
+        self._drain_updates()
         batch, self._queue = self._queue, []
         if not batch:
             return []
@@ -163,9 +187,58 @@ class QueryService:
     def pending(self) -> int:
         return len(self._queue)
 
+    @property
+    def pending_updates(self) -> int:
+        return len(self._pending_updates)
+
     # ------------------------------------------------------------------ #
     # graph mutation / epoch handling
     # ------------------------------------------------------------------ #
+
+    def apply_updates(self, updates: list) -> None:
+        """The write path: queue a batch of graph updates (op tuples in
+        ``MaintainableIndex.apply_updates`` form, e.g.
+        ``("insert_edge", v, u, lbl)``).
+
+        Reads already queued are drained first (they targeted the
+        pre-update graph), then the updates are queued and the epoch
+        bumps — O(1) invalidation of every cached answer.  The expensive
+        work (mirror surgery + mirror→device flush) is deferred to the
+        next query drain, so consecutive ``apply_updates`` calls coalesce
+        into one batched maintenance round."""
+        if self.maintainer is None:
+            raise RuntimeError(
+                "no maintainer bound — construct the service with "
+                "QueryService(engine, maintainer=MaintainableIndex.build(...))"
+            )
+        if not updates:
+            return
+        for op in updates:  # reject malformed ops at enqueue, not drain
+            if not op or op[0] not in _UPDATE_OPS:
+                raise ValueError(f"unknown update op {op!r}")
+        if self._queue:
+            self.flush()  # reads before the write see the pre-update graph
+        self._pending_updates.extend(updates)
+        self.bump_epoch()
+
+    def _drain_updates(self) -> None:
+        """Coalesce every queued update into one mirror batch + one
+        mirror→device flush, and rebind the engine to the flushed
+        arrays."""
+        if not self._pending_updates:
+            return
+        ups, self._pending_updates = self._pending_updates, []
+        try:
+            self.maintainer.apply_updates(ups)
+        except Exception:
+            # the mirror validates before mutating, so a failed batch left
+            # it untouched: requeue so ops coalesced into this batch
+            # aren't silently dropped
+            self._pending_updates = ups + self._pending_updates
+            raise
+        self.engine.rebind(self.maintainer.flush())
+        self.stats.updates_applied += len(ups)
+        self.stats.update_batches += 1
 
     def rebind(self, index: CPQxIndex) -> None:
         """Swap in a rebuilt index (after ``core.maintenance`` mirror
@@ -174,7 +247,7 @@ class QueryService:
         plan cache (iaCPQx plans depend on available sequences)."""
         if self._queue:
             self.flush()  # drain against the index the requests targeted
-        self.engine = Engine(index)
+        self.engine.rebind(index)
         self.bump_epoch()
 
     def bump_epoch(self) -> None:

@@ -1,0 +1,327 @@
+"""Differential update-test harness: the mirror→device flush pipeline.
+
+After any batch of lazy mirror updates (Sec. IV-E / V-C), a flushed
+device index must answer bit-identically to the host oracle on the
+updated graph — for identity, joins, conjunctions, and inverse labels,
+across k ∈ {2, 3}.  Also covers capacity growth across flushes, the
+class-partition invariants of the serialized arrays, interest-update
+round-trips, and the ``QueryService`` write path end to end.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.capacity import FlushCaps
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import Conj, Edge, Identity, Join, instantiate_template
+from repro.core.service import QueryService
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in arr.tolist()}
+
+
+def _query_pool(g, rng, n_random: int = 8) -> list:
+    """Identity, forward/inverse edges, joins, conjunctions, conj-id —
+    plus random CPQs for breadth."""
+    L = g.n_labels
+    pool = [
+        Identity(),
+        Edge(0),
+        Edge(L),  # inverse of label 0
+        Join(Edge(0), Edge(1 % L)),
+        Join(Edge(0), Edge(L)),  # forward then inverse
+        Conj(Join(Edge(0), Edge(1 % L)), Edge(L)),
+        Conj(Join(Edge(0), Edge(0)), Identity()),  # cycle check
+    ]
+    pool += [oracle.random_cpq(rng, g, 3) for _ in range(n_random)]
+    return pool
+
+
+def _random_batch(g, rng, n_ops: int) -> list:
+    base = g._base_edges()
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.45 or base.shape[0] == 0:
+            ops.append(("insert_edge", int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_labels))))
+        elif roll < 0.8:
+            e = base[int(rng.integers(0, base.shape[0]))]
+            ops.append(("delete_edge", int(e[0]), int(e[1]), int(e[2])))
+        else:
+            e = base[int(rng.integers(0, base.shape[0]))]
+            ops.append(("change_label", int(e[0]), int(e[1]), int(e[2]),
+                        (int(e[2]) + 1) % g.n_labels))
+    return ops
+
+
+def _assert_device_matches_oracle(mi, rng, n_random: int = 8) -> None:
+    eng = Engine(mi.flush())
+    for q in _query_pool(mi.g, rng, n_random):
+        got = _rows(eng.execute(q))
+        want = oracle.cpq_eval(mi.g, q)
+        assert got == want, f"device != oracle for {q}"
+
+
+class TestFlushDifferential:
+    """The harness proper: randomized update batches, flush, compare."""
+
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    @pytest.mark.parametrize("k", [2, 3])
+    def test_randomized_batches(self, seed, k):
+        g = random_graph(seed, n_max=12, m_max=26)
+        rng = np.random.default_rng(seed + 100)
+        mi = MaintainableIndex.build(g, k)
+        for _ in range(3):
+            mi.apply_updates(_random_batch(mi.g, rng, n_ops=4))
+            _assert_device_matches_oracle(mi, rng, n_random=6)
+
+    def test_flush_without_updates_round_trips(self, ex_graph):
+        """Flushing a pristine mirror must agree with a device build."""
+        mi = MaintainableIndex.build(ex_graph, 2)
+        flushed = mi.flush()
+        built = cindex.build(ex_graph, 2)
+        assert flushed.n_classes == built.n_classes
+        assert flushed.n_pairs == built.n_pairs
+        assert flushed.seq_ranges.keys() == built.seq_ranges.keys()
+        ef, eb = Engine(flushed), Engine(built)
+        rng = np.random.default_rng(5)
+        for q in _query_pool(ex_graph, rng, 4):
+            assert _rows(ef.execute(q)) == _rows(eb.execute(q))
+
+    def test_flush_preserves_lazy_partition(self, ex_graph):
+        """Flush must serialize the *split* partition, not re-merge it —
+        class count equals the mirror's, not the fresh-build minimum."""
+        mi = MaintainableIndex.build(ex_graph, 2)
+        v, u, l = map(int, mi.g._base_edges()[0])
+        mi.delete_edge(v, u, l)
+        mi.insert_edge(v, u, l)  # same graph, lazily-split mirror
+        assert mi.n_splits > 0
+        flushed = mi.flush()
+        assert flushed.n_classes == mi.index.n_classes
+        assert flushed.n_classes > cindex.build(mi.g, 2).n_classes
+
+    def test_flushed_array_invariants(self):
+        """Serialized arrays obey the engine's structural contracts:
+        CSR monotonicity, sorted class lists per seq, seq_ranges
+        consistency, valid-entry counts."""
+        g = random_graph(4, n_max=12, m_max=28)
+        rng = np.random.default_rng(4)
+        mi = MaintainableIndex.build(g, 2)
+        mi.apply_updates(_random_batch(mi.g, rng, 5))
+        idx = mi.flush()
+        a = idx.arrays
+        starts = np.asarray(a.class_starts)
+        assert (np.diff(starts) >= 0).all()
+        n_pairs = int(a.pair_count)
+        assert starts[int(a.n_classes)] == n_pairs
+        l2c = np.asarray(a.l2c_cls)
+        for s, (lo, hi) in idx.seq_ranges.items():
+            block = l2c[lo:hi]
+            assert (np.diff(block) > 0).all()  # strictly ascending class ids
+            assert (block < int(a.n_classes)).all()
+        assert int(a.l2c_count) == sum(hi - lo for lo, hi in idx.seq_ranges.values())
+        # host mirror and device image report identical sizes
+        assert idx.size_entries() == mi.size_entries()
+
+    def test_caps_grow_geometrically_and_stay_stable(self):
+        g = random_graph(6, n_max=10, m_max=14)
+        mi = MaintainableIndex.build(g, 2)
+        first = mi.flush()
+        assert isinstance(first.caps, FlushCaps)
+        # no growth without updates: identical caps object
+        assert mi.flush().caps == first.caps
+        rng = np.random.default_rng(8)
+        for _ in range(4):
+            ins = [("insert_edge", int(rng.integers(0, g.n_vertices)),
+                    int(rng.integers(0, g.n_vertices)),
+                    int(rng.integers(0, g.n_labels))) for _ in range(6)]
+            mi.apply_updates(ins)
+        grown = mi.flush().caps
+        assert grown.pair_cap >= first.caps.pair_cap
+        # pow2 ladder: any growth is by doubling
+        for before, after in [(first.caps.pair_cap, grown.pair_cap),
+                              (first.caps.l2c_cap, grown.l2c_cap),
+                              (first.caps.seq_cap, grown.seq_cap)]:
+            ratio = after / before
+            assert ratio >= 1 and ratio == int(ratio)
+            assert int(ratio) & (int(ratio) - 1) == 0
+
+    def test_flush_after_emptying_the_graph(self):
+        g = random_graph(13, n_max=8, m_max=10)
+        mi = MaintainableIndex.build(g, 2)
+        for (v, u, l) in [tuple(map(int, e)) for e in g._base_edges()]:
+            mi.delete_edge(v, u, l)
+        eng = Engine(mi.flush())
+        assert eng.execute(Edge(0)).shape[0] == 0
+        assert _rows(eng.execute(Identity())) == {
+            (v, v) for v in range(g.n_vertices)}
+
+
+class TestBatchedUpdates:
+    def test_batch_equals_sequential_answers(self):
+        """One apply_updates batch and per-op application must yield the
+        same query answers (the batch may split less — that's the point)."""
+        g = random_graph(17, n_max=12, m_max=24)
+        rng = np.random.default_rng(17)
+        batch = _random_batch(g, rng, 6)
+        mb = MaintainableIndex.build(g, 2)
+        mb.apply_updates(batch)
+        ms = MaintainableIndex.build(g, 2)
+        for op in batch:
+            ms.apply_updates([op])
+        assert {tuple(map(int, e)) for e in mb.g._base_edges()} == \
+               {tuple(map(int, e)) for e in ms.g._base_edges()}
+        qrng = np.random.default_rng(3)
+        for q in _query_pool(mb.g, qrng, 6):
+            assert mb.query(q) == ms.query(q) == oracle.cpq_eval(mb.g, q)
+        assert mb.n_splits <= ms.n_splits
+
+    def test_delete_vertex(self):
+        g = random_graph(19, n_max=12, m_max=24)
+        mi = MaintainableIndex.build(g, 2)
+        mi.apply_updates([("delete_vertex", 1)])
+        assert all(1 not in (int(s), int(d))
+                   for s, d in zip(mi.g.src, mi.g.dst))
+        rng = np.random.default_rng(2)
+        _assert_device_matches_oracle(mi, rng, 4)
+
+    def test_delete_isolated_vertex_is_noop(self):
+        g = random_graph(23, n_max=10, m_max=16)
+        iso = g.n_vertices - 1
+        mi = MaintainableIndex.build(g.with_edges_removed(
+            [tuple(map(int, e)) for e in g._base_edges()
+             if iso in (int(e[0]), int(e[1]))]), 2)
+        splits0, classes0 = mi.n_splits, dict(mi.index.c2p)
+        mi.delete_vertex(iso)
+        assert mi.n_splits == splits0
+        assert mi.index.c2p == classes0  # untouched, not resplit
+
+    def test_insert_vertex_batch(self):
+        g = random_graph(29, n_max=10, m_max=16)
+        mi = MaintainableIndex.build(g, 2)
+        x = 0  # wire an existing vertex id with fresh edges
+        mi.apply_updates([("insert_vertex",
+                           [(x, 2, 0), (3, x, 1), (x, 4, 1)])])
+        rng = np.random.default_rng(6)
+        _assert_device_matches_oracle(mi, rng, 4)
+
+
+class TestInterestMaintenanceFlush:
+    """Sec. V-C on iaCPQx mirrors: interest updates round-trip through
+    flush; lookup_range stays consistent with seq_ranges."""
+
+    @pytest.mark.parametrize("seed", [1, 10])
+    def test_insert_delete_interest_roundtrip(self, seed):
+        g = random_graph(seed, n_max=14, m_max=30)
+        mi = MaintainableIndex.build(g, 2, interests=[(0, 1), (1, 1)])
+        rng = np.random.default_rng(seed)
+        _assert_device_matches_oracle(mi, rng, 5)
+
+        mi.delete_interest((0, 1))
+        idx = mi.flush()
+        assert (0, 1) not in idx.seq_ranges
+        assert idx.lookup_range((0, 1)) == (0, 0)  # split at query time
+        _assert_device_matches_oracle(mi, rng, 5)
+
+        mi.insert_interest((2, 0))
+        idx = mi.flush()
+        # every mirror sequence is flushable and the ranges cover exactly
+        # the mirror's class lists
+        for s, cs in mi.index.l2c.items():
+            lo, hi = idx.lookup_range(s)
+            assert (lo, hi) == idx.seq_ranges[s]
+            assert hi - lo == len(cs), f"seq {s}"
+        _assert_device_matches_oracle(mi, rng, 5)
+
+    def test_mixed_graph_and_interest_updates_flush(self):
+        g = random_graph(15, n_max=12, m_max=24)
+        mi = MaintainableIndex.build(g, 2, interests=[(0, 0)])
+        v, u, l = map(int, mi.g._base_edges()[0])
+        mi.apply_updates([("delete_edge", v, u, l)])
+        mi.insert_interest((1, 0))
+        mi.apply_updates([("insert_edge", v, u, l)])
+        rng = np.random.default_rng(1)
+        _assert_device_matches_oracle(mi, rng, 5)
+
+
+class TestServiceWritePath:
+    def test_apply_updates_coalesce_and_serve(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2)
+        svc = QueryService(Engine(mi.flush()), max_batch=16, maintainer=mi)
+        q = instantiate_template("C2", [0, 0])
+        before = _rows(svc.query(q))
+        assert before == oracle.cpq_eval(ex_graph, q)
+        assert svc.submit(q).from_cache  # warmed
+
+        svc.apply_updates([("insert_edge", 2, 3, 0)])
+        svc.apply_updates([("delete_edge", 0, 1, 0)])
+        assert svc.pending_updates == 2  # queued, not yet applied
+
+        stale = svc.submit(q)
+        assert not stale.from_cache  # write bumped the epoch immediately
+        got = _rows(svc.query(q))
+        assert svc.pending_updates == 0
+        assert svc.stats.update_batches == 1  # both calls coalesced
+        assert svc.stats.updates_applied == 2
+        assert got == oracle.cpq_eval(mi.g, q)
+        assert got != before
+
+    def test_reads_before_write_see_old_graph(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2)
+        svc = QueryService(Engine(mi.flush()), max_batch=64, maintainer=mi)
+        q = instantiate_template("C2", [0, 0])
+        req = svc.submit(q)
+        gt_old = oracle.cpq_eval(ex_graph, q)
+        svc.apply_updates([("insert_edge", 2, 3, 0)])
+        assert req.done and _rows(req.result) == gt_old  # drained first
+        assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q)
+
+    def test_write_path_requires_maintainer(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)))
+        with pytest.raises(RuntimeError, match="maintainer"):
+            svc.apply_updates([("insert_edge", 0, 1, 0)])
+
+    def test_malformed_op_rejected_at_enqueue(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2)
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        with pytest.raises(ValueError, match="unknown update op"):
+            svc.apply_updates([("frobnicate", 0, 1)])
+        assert svc.pending_updates == 0
+
+    def test_failed_drain_requeues_updates(self, ex_graph):
+        """A batch that fails mirror validation at drain time must not be
+        silently dropped: the pending updates survive for a retry and the
+        mirror/graph stay untouched."""
+        mi = MaintainableIndex.build(ex_graph, 2)
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        q = instantiate_template("C2", [0, 0])
+        bad_label = ex_graph.n_labels  # out of range -> from_edges raises
+        svc.apply_updates([("insert_edge", 2, 3, 0)])
+        svc.apply_updates([("insert_edge", 0, 1, bad_label)])
+        with pytest.raises(ValueError):
+            svc.query(q)
+        assert svc.pending_updates == 2  # both ops requeued, none lost
+        assert mi.g is ex_graph  # mirror untouched by the failed batch
+        # dropping the poison op lets the valid one apply on the retry
+        svc._pending_updates = [u for u in svc._pending_updates
+                                if u[3] != bad_label]
+        assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q)
+        assert (2, 3, 0) in {tuple(map(int, e)) for e in mi.g._base_edges()}
+
+    def test_interleaved_updates_and_queries(self):
+        g = random_graph(31, n_max=12, m_max=24)
+        mi = MaintainableIndex.build(g, 2)
+        svc = QueryService(Engine(mi.flush()), max_batch=8, maintainer=mi)
+        rng = np.random.default_rng(31)
+        for step in range(4):
+            svc.apply_updates(_random_batch(mi.g, rng, 3))
+            for q in _query_pool(mi.g, rng, 2)[:5]:
+                assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+        assert svc.stats.update_batches == 4

@@ -1,0 +1,111 @@
+"""Hypothesis property tests for lazy maintenance (Prop. 4.2):
+
+* arbitrary interleavings of edge updates and queries on small random
+  graphs never change query answers — the lazily-split mirror, a
+  from-scratch rebuilt index, and the semantics oracle always agree;
+* ``n_splits`` grows monotonically between rebuilds (lazy updates only
+  ever split classes, never merge);
+* the mirror→device flush agrees with the mirror at every prefix point.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.graph import LabeledGraph
+from repro.core.maintenance import MaintainableIndex
+
+N_VERTICES = 7
+N_LABELS = 2
+
+edge_st = st.tuples(
+    st.integers(0, N_VERTICES - 1),
+    st.integers(0, N_VERTICES - 1),
+    st.integers(0, N_LABELS - 1),
+)
+
+# an op is (kind, v, u, lbl): kind 0 = insert, 1 = delete, 2 = relabel
+op_st = st.tuples(st.integers(0, 2), st.integers(0, N_VERTICES - 1),
+                  st.integers(0, N_VERTICES - 1), st.integers(0, N_LABELS - 1))
+
+
+def _to_update(op, g: LabeledGraph):
+    kind, v, u, l = op
+    base = [tuple(map(int, e)) for e in g._base_edges()]
+    if kind == 0 or not base:
+        return ("insert_edge", v, u, l)
+    target = base[(v * N_VERTICES + u) % len(base)]
+    if kind == 1:
+        return ("delete_edge", *target)
+    return ("change_label", *target, (target[2] + 1) % N_LABELS)
+
+
+class TestInterleavingProperty:
+    @given(edges=st.lists(edge_st, min_size=2, max_size=10),
+           ops=st.lists(op_st, min_size=1, max_size=6),
+           qseed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def test_answers_invariant_under_lazy_maintenance(self, edges, ops, qseed):
+        """At every point of an update/query interleaving, the lazy
+        mirror answers exactly like a from-scratch rebuild of the current
+        graph (Prop. 4.2) — the split partition loses pruning power, not
+        correctness."""
+        g = LabeledGraph.from_edges(N_VERTICES, N_LABELS, edges)
+        mi = MaintainableIndex.build(g, 2)
+        rng = np.random.default_rng(qseed)
+        splits_seen = 0
+        for op in ops:
+            mi.apply_updates([_to_update(op, mi.g)])
+            assert mi.n_splits >= splits_seen  # only grows between rebuilds
+            splits_seen = mi.n_splits
+            q = oracle.random_cpq(rng, mi.g, 2)
+            rebuilt = oracle.build_index(mi.g, 2)
+            truth = oracle.cpq_eval(mi.g, q)
+            assert mi.query(q) == truth
+            assert oracle.query_with_index(mi.g, rebuilt, q) == truth
+
+    @given(edges=st.lists(edge_st, min_size=2, max_size=8),
+           ops=st.lists(op_st, min_size=1, max_size=4),
+           qseed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_flush_agrees_with_mirror_at_every_prefix(self, edges, ops, qseed):
+        """The device image refreshed by flush() answers exactly like the
+        host mirror after every update batch."""
+        g = LabeledGraph.from_edges(N_VERTICES, N_LABELS, edges)
+        mi = MaintainableIndex.build(g, 2)
+        rng = np.random.default_rng(qseed)
+        for op in ops:
+            mi.apply_updates([_to_update(op, mi.g)])
+            eng = Engine(mi.flush())
+            for _ in range(2):
+                q = oracle.random_cpq(rng, mi.g, 2)
+                got = {tuple(r) for r in eng.execute(q).tolist()}
+                assert got == oracle.cpq_eval(mi.g, q), q
+
+    @given(edges=st.lists(edge_st, min_size=2, max_size=10),
+           ops=st.lists(op_st, min_size=1, max_size=8))
+    @settings(max_examples=12, deadline=None)
+    def test_partition_stays_cpq_correct(self, edges, ops):
+        """The lazily-updated mirror keeps the partition invariant the
+        index needs: classes are cycle-pure and signature-pure."""
+        g = LabeledGraph.from_edges(N_VERTICES, N_LABELS, edges)
+        mi = MaintainableIndex.build(g, 2)
+        updates = []
+        for op in ops:
+            updates.append(_to_update(op, mi.g))
+        mi.apply_updates(updates)
+        seqs = oracle.enumerate_pairs(mi.g, 2)
+        for c, ps in mi.index.c2p.items():
+            sig0 = frozenset(seqs.get(ps[0], frozenset()))
+            if mi.index.interests is not None:
+                sig0 = frozenset(s for s in sig0 if s in mi.index.interests)
+            for p in ps[1:]:
+                sig = frozenset(seqs.get(p, frozenset()))
+                if mi.index.interests is not None:
+                    sig = frozenset(s for s in sig if s in mi.index.interests)
+                assert sig == sig0, f"class {c} not signature-pure"
+                assert (p[0] == p[1]) == mi.index.cyclic[c]
