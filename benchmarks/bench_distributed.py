@@ -1,0 +1,107 @@
+"""Distributed engine benchmark (PR 3 tentpole): the sharded CPQx
+backend vs the local engine on the Fig. 5 template workload.
+
+Every speedup number this bench emits is *gated on bit-identical
+answers*: for each query the sharded engine's (n, 2) array must equal
+the local engine's exactly (values and order), and in ``--smoke`` mode
+both must match the numpy semantics oracle.  A distributed engine that
+is fast but wrong prints FAIL and exits non-zero.
+
+On CPU the mesh is ``--xla_force_host_platform_device_count`` fake
+devices, so the point is the *contract* (same executables, psum'd
+overflow ladder, exchange-based joins), not wall-clock wins — all_to_all
+between fake devices is memcpy.  The emitted per-path timings document
+the collective overhead honestly; on a real TPU pod slice the same code
+shards the index memory n_shards-way, which is the scaling story
+(ROADMAP: graphs whose index exceeds one device's HBM).
+
+    PYTHONPATH=src python -m benchmarks.bench_distributed [--smoke]
+(sets XLA_FLAGS itself when unset; run standalone, not under pytest)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph, oracle-checked, n_shards in {1, 8} (CI)")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="mesh size for the non-smoke run")
+    ap.add_argument("--iters", type=int, default=3)
+    args, _ = ap.parse_known_args()
+
+    n_dev = max(args.shards, 8)
+    if "XLA_FLAGS" not in os.environ:  # must precede the first jax import
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev}")
+
+    import numpy as np
+
+    from repro import compat
+    from repro.core import index as cindex, oracle
+    from repro.core.engine import Engine
+    from repro.core.query import TEMPLATE_ARITY, instantiate_template
+
+    from benchmarks.common import DATASETS, TEMPLATE_NAMES, emit, timeit
+
+    ds = "example" if args.smoke else "gmark-small"
+    shard_counts = [1, 8] if args.smoke else [args.shards]
+    iters = 1 if args.smoke else args.iters
+
+    g = DATASETS[ds]()
+    idx = cindex.build(g, 2)
+    local = Engine(idx)
+    rng = np.random.default_rng(17)
+    present = np.unique(g.lbl)
+    queries = []
+    for name in TEMPLATE_NAMES:
+        for _ in range(1 if args.smoke else 4):
+            queries.append(instantiate_template(
+                name, rng.choice(present, TEMPLATE_ARITY[name]).tolist()))
+
+    local_res = [local.execute(q) for q in queries]
+    if args.smoke:
+        for q, rows in zip(queries, local_res):
+            assert ({tuple(r) for r in rows.tolist()}
+                    == oracle.cpq_eval(g, q)), f"local != oracle: {q}"
+    local_us = timeit(lambda: [local.execute(q) for q in queries],
+                      iters=iters) / len(queries)
+    emit(f"distributed/{ds}/local/sequential", local_us,
+         f"n_queries={len(queries)}")
+
+    failed = False
+    for n_shards in shard_counts:
+        mesh = compat.make_mesh((n_shards,), ("engine",))
+        sharded = Engine(idx, mesh=mesh)
+        got = [sharded.execute(q) for q in queries]
+        exact = all(a.shape == b.shape and bool(np.all(a == b))
+                    for a, b in zip(local_res, got))
+        if args.smoke:
+            exact = exact and all(
+                {tuple(r) for r in b.tolist()} == oracle.cpq_eval(g, q)
+                for q, b in zip(queries, got))
+        us = timeit(lambda: [sharded.execute(q) for q in queries],
+                    iters=iters) / len(queries)
+        bat = sharded.execute_batch(queries)
+        exact = exact and all(bool(np.all(a == b))
+                              for a, b in zip(local_res, bat))
+        speedup = local_us / us
+        verdict = "PASS" if exact else "FAIL"
+        emit(f"distributed/{ds}/shards{n_shards}/sequential", us,
+             f"speedup={speedup:.2f}x;bit_identical={exact};{verdict}")
+        failed |= not exact
+        del sharded
+
+    emit(f"distributed/{ds}/acceptance", 0.0,
+         "answers==local==oracle;" + ("FAIL" if failed else "PASS"))
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,5 @@
 """The paper's contribution: CPQ-aware path indexing (CPQx / iaCPQx),
-the capacity-padded relational substrate, the device query engine, lazy
-maintenance, baselines, the semantics oracle, and shard_map distribution."""
+the capacity-padded relational substrate, the backend-agnostic query
+engine (``backend`` — local; ``distributed`` — whole plans inside
+shard_map over a ``sharded_index`` layout), lazy maintenance, baselines,
+and the semantics oracle."""

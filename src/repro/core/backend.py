@@ -1,0 +1,341 @@
+"""Execution backends — the physical algebra behind the CPQx engine.
+
+The planner (``core.query``) compiles a CPQ to a physical plan; *how*
+that plan's operators execute is a backend concern.  This module defines
+the backend protocol and writes the plan walker (:func:`run_plan_ops`)
+ONCE against it:
+
+  * :class:`PlanOps` — the operator protocol (lookup / materialize /
+    conjoin / join / identity over capacity-padded relations) with the
+    single-device math as shared default implementations;
+  * :class:`LocalOps` — the protocol bound to one device's
+    ``DeviceIndexArrays`` (the classic engine path);
+  * :class:`ExecutionBackend` — the host-facing contract the
+    :class:`repro.core.engine.Engine` drives (``run`` / ``run_batch``
+    with numpy in, numpy-or-overflow out);
+  * :class:`LocalBackend` — ``ExecutionBackend`` over :class:`LocalOps`
+    (one jit per (plan shape, caps), vmapped for batches).
+
+``repro.core.distributed.ShardedBackend`` implements the same two
+protocols over a mesh: it subclasses :class:`PlanOps` with
+repartitioning materialize/join and runs the *same* walker inside one
+``shard_map``, so the local and distributed engines cannot drift — they
+are one algorithm over two array layouts.
+
+Evaluation is two-stage exactly as in the paper:
+  * class space: LOOKUP returns sorted class-id lists; CONJUNCTION is a
+    sorted intersection of class ids (Prop. 4.1); IDENTITY is a gather of
+    the cycle-purity flag (classes are cycle-pure by construction).
+  * pair space: after any JOIN the evaluator materializes s-t pairs
+    (expansion join through I_c2p) and proceeds with sorted set algebra.
+
+Every relation is capacity-padded; backends surface a sticky overflow
+flag and the host driver retries with doubled capacities (the honest
+dynamic->static bridge).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import relational as R
+from .index import DeviceIndexArrays
+from .paths import _recap
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryCaps:
+    """Static capacities of the compiled plan (jit key)."""
+
+    class_cap: int  # class-id sets
+    pair_cap: int  # materialized pair sets
+    join_cap: int  # expansion-join outputs (pre-dedup)
+
+    def doubled(self) -> "QueryCaps":
+        return QueryCaps(self.class_cap * 2, self.pair_cap * 2, self.join_cap * 2)
+
+
+def default_caps(index) -> QueryCaps:
+    n_pairs = max(16, int(index.arrays.pair_count))
+    n_cls = max(16, int(index.arrays.n_classes))
+    p2 = 1 << (n_pairs - 1).bit_length()
+    c2 = 1 << (n_cls - 1).bit_length()
+    return QueryCaps(class_cap=c2, pair_cap=p2, join_cap=2 * p2)
+
+
+# ---------------------------------------------------------------------- #
+# free-function device operators (shared math; backends compose these)
+# ---------------------------------------------------------------------- #
+
+
+def _join_pairs(a: R.Relation, b: R.Relation, join_cap: int, pair_cap: int) -> R.Relation:
+    """(v,u) ⋈ (x,y) on u == x -> distinct (v, y).  b sorted by (x, y)."""
+    out = R.expansion_join(a, b, a_on=[1], out_cols=[("a", 0), ("b", 1)],
+                           out_capacity=join_cap)
+    out = R.rel_unique(R.rel_sort(out, num_keys=2), 2)
+    return _recap(out, pair_cap)
+
+
+# ---------------------------------------------------------------------- #
+# the operator protocol
+# ---------------------------------------------------------------------- #
+
+
+class PlanOps:
+    """Device-side operator set a plan executes against.
+
+    Subclasses bind the index arrays (one device's, or one shard's local
+    view) as attributes before the walker runs:
+
+    ``l2c_cls``       (l2c_cap,) class ids, ascending within a seq block
+    ``class_starts``  (class_cap + 1,) CSR offsets into the c2p arrays
+    ``c2p_v, c2p_u``  the I_c2p pair columns the offsets index
+    ``class_cyclic``  (class_cap,) 0/1 cycle-purity flags
+    ``n_vertices``    static vertex count (IDENTITY)
+
+    The default method bodies are the exact single-device operators; a
+    distributed backend overrides the pair-space producers (materialize,
+    join, identity, finish) to add exchanges, and inherits the class-space
+    ops verbatim — class relations are replicated by the paper's central
+    size observation, so their math is layout-independent.
+    """
+
+    l2c_cls: jax.Array
+    class_starts: jax.Array
+    c2p_v: jax.Array
+    c2p_u: jax.Array
+    class_cyclic: jax.Array
+    n_vertices: int
+
+    # ---- class space ---- #
+
+    def lookup_classes(self, start, length, cap: int) -> R.Relation:
+        idx = jnp.arange(cap, dtype=R.I32)
+        valid = idx < length
+        src = jnp.clip(start + idx, 0, self.l2c_cls.shape[0] - 1)
+        ids = jnp.where(valid, self.l2c_cls[src], R.SENTINEL)
+        ovf = length > cap
+        return R.Relation((ids,), jnp.minimum(length, cap).astype(R.I32), ovf)
+
+    def conj_classes(self, a: R.Relation, b: R.Relation) -> R.Relation:
+        """Prop. 4.1 on device: sorted-intersect Pallas kernel."""
+        mask = kops.sorted_member_mask(b.cols[0], b.count, a.cols[0])
+        out = R.rel_compact(a, mask > 0)
+        # an undersized RIGHT list means missing matches: sticky
+        return R.Relation(out.cols, out.count, out.overflow | b.overflow)
+
+    def conj_id_classes(self, classes: R.Relation) -> R.Relation:
+        cyc = self.class_cyclic[
+            jnp.clip(classes.cols[0], 0, self.class_cyclic.shape[0] - 1)]
+        keep = (cyc == 1) & R.valid_mask(classes)
+        return R.rel_compact(classes, keep)
+
+    # ---- pair space ---- #
+
+    def materialize(self, classes: R.Relation, pair_cap: int) -> R.Relation:
+        """classes -> sorted distinct (v, u).  Classes are disjoint, so the
+        expansion introduces no duplicate pairs.  The gather pass is the
+        ``expand_join`` Pallas kernel (fused binary search + payload
+        gather)."""
+        cid = jnp.clip(classes.cols[0], 0, self.class_starts.shape[0] - 2)
+        lo = self.class_starts[cid]
+        cnt = self.class_starts[cid + 1] - lo
+        cnt = jnp.where(R.valid_mask(classes), cnt, 0).astype(R.I32)
+        ends = jnp.cumsum(cnt, dtype=R.I32)
+        total = ends[-1]
+        v, u, _ = kops.expand_join_gather(
+            ends, lo, classes.cols[0], self.c2p_v, self.c2p_u, total, pair_cap
+        )
+        rel = R.Relation((v, u), jnp.minimum(total, pair_cap).astype(R.I32),
+                         classes.overflow | (total > pair_cap))
+        return R.rel_sort(rel, num_keys=2)
+
+    def join_pairs(self, a: R.Relation, b: R.Relation, join_cap: int,
+                   pair_cap: int) -> R.Relation:
+        return _join_pairs(a, b, join_cap, pair_cap)
+
+    def conj_pairs(self, a: R.Relation, b: R.Relation) -> R.Relation:
+        return R.rel_intersect(a, b, 2)
+
+    def conj_id_pairs(self, pairs: R.Relation) -> R.Relation:
+        return R.rel_compact(pairs, pairs.cols[0] == pairs.cols[1])
+
+    def identity_pairs(self, pair_cap: int) -> R.Relation:
+        v = jnp.arange(pair_cap, dtype=R.I32)
+        m = v < self.n_vertices
+        col = jnp.where(m, v, R.SENTINEL)
+        return R.Relation(
+            (col, col),
+            jnp.asarray(min(self.n_vertices, pair_cap), R.I32),
+            jnp.asarray(self.n_vertices > pair_cap))
+
+    # ---- epilogue ---- #
+
+    def finish(self, pairs: R.Relation):
+        """Final (relation, overflow) of a plan — a distributed backend
+        reduces the per-shard sticky flags here."""
+        return pairs, pairs.overflow
+
+
+class LocalOps(PlanOps):
+    """The operator protocol bound to one device's index arrays."""
+
+    def __init__(self, a: DeviceIndexArrays, n_vertices: int):
+        self.l2c_cls = a.l2c_cls
+        self.class_starts = a.class_starts
+        self.c2p_v = a.c2p_v
+        self.c2p_u = a.c2p_u
+        self.class_cyclic = a.class_cyclic
+        self.n_vertices = n_vertices
+
+
+# ---------------------------------------------------------------------- #
+# plan walker — written once against the protocol
+# ---------------------------------------------------------------------- #
+
+
+def run_plan_ops(ops: PlanOps, plan, caps: QueryCaps, lookup_ranges: jax.Array):
+    """Execute a physical plan against a :class:`PlanOps` operator set.
+
+    ``lookup_ranges``: (n_lookups, 2) int32 of (start, len) per LOOKUP
+    segment, in plan order.  Returns whatever ``ops.finish`` yields — for
+    every shipped backend a pair Relation (sorted distinct (v, u)) and
+    the sticky overflow flag.
+
+    ``plan`` may be a frozen plan or its :func:`repro.core.query.plan_shape`
+    — the device computation only depends on the shape (LOOKUP nodes carry
+    their segment count; the label values stream in via ``lookup_ranges``).
+    """
+    counter = [0]
+
+    def next_range():
+        i = counter[0]
+        counter[0] += 1
+        return lookup_ranges[i, 0], lookup_ranges[i, 1]
+
+    def as_pairs(res):
+        kind, rel = res
+        if kind == "classes":
+            return ops.materialize(rel, caps.pair_cap)
+        return rel
+
+    def ev(node):
+        kind = node[0]
+        if kind == "lookup":
+            nseg = node[1] if isinstance(node[1], int) else len(node[1])
+            start, length = next_range()
+            cur = ("classes", ops.lookup_classes(start, length, caps.class_cap))
+            for _ in range(nseg - 1):
+                start, length = next_range()
+                nxt = ops.lookup_classes(start, length, caps.class_cap)
+                cur = ("pairs", ops.join_pairs(as_pairs(cur),
+                                               ops.materialize(nxt, caps.pair_cap),
+                                               caps.join_cap, caps.pair_cap))
+            return cur
+        if kind == "identity":
+            return ("pairs", ops.identity_pairs(caps.pair_cap))
+        if kind == "conj_id":
+            res = ev(node[1])
+            if res[0] == "classes":
+                return ("classes", ops.conj_id_classes(res[1]))
+            return ("pairs", ops.conj_id_pairs(res[1]))
+        left = ev(node[1])
+        right = ev(node[2])
+        if kind == "conj":
+            if left[0] == "classes" and right[0] == "classes":
+                return ("classes", ops.conj_classes(left[1], right[1]))
+            return ("pairs", ops.conj_pairs(as_pairs(left), as_pairs(right)))
+        if kind == "join":
+            return ("pairs", ops.join_pairs(as_pairs(left), as_pairs(right),
+                                            caps.join_cap, caps.pair_cap))
+        raise ValueError(kind)
+
+    return ops.finish(as_pairs(ev(plan)))
+
+
+# ---------------------------------------------------------------------- #
+# jitted local entry points
+# ---------------------------------------------------------------------- #
+
+
+def _run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
+              lookup_ranges: jax.Array):
+    return run_plan_ops(LocalOps(a, n_vertices), plan, caps, lookup_ranges)
+
+
+run_plan = functools.partial(
+    jax.jit, static_argnames=("plan", "caps", "n_vertices"))(_run_plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "caps", "n_vertices"))
+def run_plan_batch(a: DeviceIndexArrays, plan, caps: QueryCaps,
+                   n_vertices: int, lookup_ranges: jax.Array):
+    """Batched :func:`run_plan`: ``lookup_ranges`` is (batch, n_lookups, 2)
+    and the whole batch evaluates through one vmapped dispatch of the same
+    executable a single query would use.  Returns a batched Relation
+    (cols (batch, cap)) and a per-query (batch,) overflow vector — each
+    lane's overflow is its own sticky flag, so the host retries only the
+    lanes that overflowed."""
+    return jax.vmap(lambda r: _run_plan(a, plan, caps, n_vertices, r))(
+        lookup_ranges)
+
+
+# ---------------------------------------------------------------------- #
+# host-facing backend contract
+# ---------------------------------------------------------------------- #
+
+
+class ExecutionBackend(abc.ABC):
+    """What the :class:`repro.core.engine.Engine` drives.
+
+    A backend owns the physical index arrays (however they are laid out)
+    and turns (plan shape, caps, lookup ranges) into numpy answers.  Both
+    entry points report overflow instead of raising: the engine owns the
+    double-and-retry capacity ladder, identically for every backend.
+    """
+
+    n_vertices: int
+
+    @abc.abstractmethod
+    def run(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        """One query.  ``ranges`` (n_lookups, 2) -> (rows | None, overflow):
+        sorted distinct (n, 2) int32 s-t pairs, or None when the sticky
+        overflow flag tripped (the caller retries with doubled caps)."""
+
+    @abc.abstractmethod
+    def run_batch(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        """Batch of same-shape queries.  ``ranges`` (batch, n_lookups, 2)
+        -> (list of rows-or-None per lane, (batch,) bool overflow)."""
+
+
+class LocalBackend(ExecutionBackend):
+    """Single-device execution over :class:`DeviceIndexArrays`."""
+
+    def __init__(self, arrays: DeviceIndexArrays, n_vertices: int):
+        self.arrays = arrays
+        self.n_vertices = n_vertices
+
+    def run(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        pairs, overflow = run_plan(self.arrays, shape, caps, self.n_vertices,
+                                   jnp.asarray(ranges))
+        if bool(overflow):
+            return None, True
+        return R.to_numpy(pairs), False
+
+    def run_batch(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        rel, overflow = run_plan_batch(self.arrays, shape, caps,
+                                       self.n_vertices, jnp.asarray(ranges))
+        overflow = np.asarray(overflow)
+        results: list = [None] * ranges.shape[0]
+        ok = np.nonzero(~overflow)[0]
+        if ok.size:
+            for lane, rows in zip(ok, R.batch_to_numpy(rel, lanes=ok)):
+                results[lane] = rows
+        return results, overflow

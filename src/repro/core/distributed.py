@@ -21,6 +21,19 @@ Operators (all inside one shard_map):
 The fixed bucket capacity is the static-shape contract: each exchange
 moves (n_shards, bucket_cap, arity) per shard; overflow is flagged and
 the host retries with doubled capacity exactly like the local engine.
+
+Whole-plan execution
+--------------------
+:class:`ShardedBackend` promotes these operators to a full execution
+backend: the *same* plan walker the local engine runs
+(``core.backend.run_plan_ops``) executes inside ONE ``shard_map`` over
+the mesh axis, against :class:`ShardedOps` — class-space relations
+replicated, pair-space relations hash-partitioned by source vertex (the
+canonical distribution: conjunctions and identity filters are then
+exchange-free; a join repartitions its probe side by the join key and
+its output back to canonical).  Per-shard sticky overflow flags are
+psum-reduced so every shard — and the host — agrees on retry, and the
+host doubles capacities exactly like the local engine.
 """
 
 from __future__ import annotations
@@ -34,7 +47,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from . import backend as B
 from . import relational as R
+from .paths import _recap
+from .sharded_index import (
+    ShardedIndexArrays,
+    index_specs,
+    partition_rows,
+    shard_index,
+)
 
 I32 = jnp.int32
 
@@ -45,7 +66,7 @@ I32 = jnp.int32
 
 
 def _bucket_of(key: jax.Array, n_shards: int) -> jax.Array:
-    return (R.mix32(key, 0xB0C4) % jnp.uint32(n_shards)).astype(I32)
+    return (R.mix32(key, R.SHARD_SALT) % jnp.uint32(n_shards)).astype(I32)
 
 
 def _pack_buckets(cols: tuple, valid: jax.Array, bucket: jax.Array,
@@ -178,26 +199,23 @@ def make_distributed_join(mesh, axis: str, n_shards: int, a_arity: int,
 
 
 def shard_relation(rows: np.ndarray, n_shards: int, cap: int,
-                   key_col: int = 0):
+                   key_col: int | tuple = 0, grow: bool = True):
     """Host-side: partition rows by hash(key) into (n_shards, cap, arity)
-    numpy blocks (the initial distribution of the pair table)."""
-    key = rows[:, key_col].astype(np.uint32)
-    h = key ^ np.uint32(0xB0C4)
-    h = (h ^ (h >> np.uint32(16))) * np.uint32(0x7FEB352D)
-    h = (h ^ (h >> np.uint32(15))) * np.uint32(0x846CA68B)
-    h = h ^ (h >> np.uint32(16))
-    bucket = (h % np.uint32(n_shards)).astype(np.int64)
-    arity = rows.shape[1]
-    out = np.full((n_shards, cap, arity), R.SENTINEL, np.int32)
-    counts = np.zeros(n_shards, np.int32)
-    for b in range(n_shards):
-        rb = rows[bucket == b]
-        rb = rb[np.lexsort(tuple(rb[:, j] for j in range(arity - 1, -1, -1)))]
-        if rb.shape[0] > cap:
-            raise ValueError(f"shard {b} overflows: {rb.shape[0]} > {cap}")
-        out[b, : rb.shape[0]] = rb
-        counts[b] = rb.shape[0]
-    return out, counts
+    numpy blocks (the initial distribution of the pair table), each
+    shard's rows sorted lexicographically.
+
+    Vectorized — one lexsort + searchsorted boundaries + one flat
+    scatter, no per-shard Python loop.  A shard outgrowing ``cap``
+    doubles the block capacity and retries (the host-side twin of the
+    device operators' flagged grow-and-retry); the returned blocks'
+    ``shape[1]`` is the possibly-grown capacity.  ``grow=False`` restores
+    the old fail-fast ``ValueError``.  ``key_col`` may be a tuple to
+    hash-combine several columns (e.g. ``(0, 1)`` for the (v, u) pair
+    table)."""
+    key_cols = key_col if isinstance(key_col, tuple) else (key_col,)
+    blocks, counts, _ = partition_rows(rows, n_shards, cap,
+                                       key_cols=key_cols, grow=grow)
+    return blocks, counts
 
 
 # ---------------------------------------------------------------------- #
@@ -236,3 +254,184 @@ def make_distributed_query_step(mesh, axis: str):
         out_specs=((spec, spec), spec),
     )
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------- #
+# whole-plan sharded execution (the backend behind Engine(index, mesh=...))
+# ---------------------------------------------------------------------- #
+
+
+class ShardedOps(B.PlanOps):
+    """The plan-operator protocol over one shard's local index view.
+
+    Conventions (per relation kind):
+      * class-space relations are **replicated** — every shard computes
+        the identical sorted class list from the replicated l2c arrays,
+        so LOOKUP / class-CONJUNCTION / IDENTITY-flag ops inherit the
+        local math unchanged;
+      * pair-space relations are **canonical sharded**: partitioned by
+        ``mix32(v) % n_shards`` and locally sorted by (v, u).  Rows of a
+        pair are globally unique, so concatenating shards reconstructs
+        the exact local-engine relation.
+
+    Producers restore the canonical distribution on exit: materialize
+    expands the shard's own classes (I_c2p is class-hash sharded) and
+    repartitions by v; a join repartitions its probe side by the join key
+    (the build side is already keyed on v), joins locally, repartitions
+    the output by v, and dedupes — the same (v, y) can be witnessed via
+    intermediates on different shards.  Capacities are the *global*
+    QueryCaps, so any answer the local engine can hold fits per shard
+    too and the overflow ladder is shared."""
+
+    def __init__(self, view: ShardedIndexArrays, n_vertices: int,
+                 n_shards: int, axis: str):
+        self.l2c_cls = view.l2c_cls
+        self.class_starts = view.class_starts
+        self.c2p_v = view.c2p_v
+        self.c2p_u = view.c2p_u
+        self.class_cyclic = view.class_cyclic
+        self.n_vertices = n_vertices
+        self.n_shards = n_shards
+        self.axis = axis
+
+    def _bucket_cap(self, pair_cap: int) -> int:
+        """Exchange block capacity: ~2x the balanced per-peer share, so
+        the received relation is capacity ~2*pair_cap per shard — flat in
+        n_shards (memory *shards down* with the mesh instead of up).
+        Hash skew past a block trips the sticky flag and rides the same
+        double-and-retry ladder as every other capacity."""
+        balanced = -(-2 * pair_cap // self.n_shards)  # ceil
+        return min(pair_cap, 1 << (max(64, balanced) - 1).bit_length())
+
+    def _canonical(self, rel: R.Relation, pair_cap: int,
+                   unique: bool = False) -> R.Relation:
+        """Repartition a pair relation by hash(v) and re-embed at
+        ``pair_cap`` (exchange skew past a block or pair_cap trips the
+        sticky flag)."""
+        cols, cnt, ovf = repartition(rel.cols, rel.count, 0, self.n_shards,
+                                     self._bucket_cap(pair_cap), self.axis)
+        out = R.Relation(cols, cnt, rel.overflow | ovf)
+        if unique:
+            out = R.rel_unique(out)
+        return _recap(out, pair_cap)
+
+    def materialize(self, classes: R.Relation, pair_cap: int) -> R.Relation:
+        local = super().materialize(classes, pair_cap)  # my classes only
+        return self._canonical(local, pair_cap)
+
+    def join_pairs(self, a: R.Relation, b: R.Relation, join_cap: int,
+                   pair_cap: int) -> R.Relation:
+        # probe side to the shard owning its join key u; the build side
+        # is canonical — already partitioned by its key v
+        ac, an, ovf = repartition(a.cols, a.count, 1, self.n_shards,
+                                  self._bucket_cap(pair_cap), self.axis)
+        a2 = R.Relation(ac, an, a.overflow | ovf)
+        out = B._join_pairs(a2, b, join_cap, pair_cap)
+        return self._canonical(out, pair_cap, unique=True)
+
+    def identity_pairs(self, pair_cap: int) -> R.Relation:
+        base = super().identity_pairs(pair_cap)
+        mine = _bucket_of(base.cols[0], self.n_shards) == jax.lax.axis_index(
+            self.axis)
+        return R.rel_compact(base, mine)
+
+    def finish(self, pairs: R.Relation):
+        # every shard's sticky flag counts: reduce so the host (and all
+        # shards) agree on retry with one scalar read
+        ovf = jax.lax.psum(pairs.overflow.astype(I32), self.axis) > 0
+        return pairs, ovf
+
+
+class ShardedBackend(B.ExecutionBackend):
+    """Whole-plan distributed execution: ``core.backend.run_plan_ops``
+    — the exact walker the local engine compiles — inside one
+    ``shard_map`` over ``axis``, against :class:`ShardedOps`.
+
+    One executable per (plan shape, caps), cached; answers are gathered
+    from the shards and lexsorted, which reproduces the local engine's
+    output bit-for-bit (canonical pair rows are globally distinct)."""
+
+    def __init__(self, sharded: ShardedIndexArrays, mesh, n_vertices: int,
+                 axis: str = "engine"):
+        n_mesh = int(dict(mesh.shape)[axis])
+        if sharded.n_shards != n_mesh:
+            raise ValueError(
+                f"index sharded {sharded.n_shards}-way but mesh axis "
+                f"{axis!r} has {n_mesh} devices")
+        self.sharded = sharded
+        self.mesh = mesh
+        self.axis = axis
+        self.n_vertices = n_vertices
+        self.n_shards = sharded.n_shards
+        self._specs = index_specs(axis)
+        self._cache: dict = {}
+
+    @classmethod
+    def from_index(cls, index, mesh, axis: str = "engine") -> "ShardedBackend":
+        n_shards = int(dict(mesh.shape)[axis])
+        return cls(shard_index(index, n_shards), mesh, index.n_vertices,
+                   axis=axis)
+
+    def reshard(self, index) -> None:
+        """Re-shard a flushed/rebuilt index *into this backend* so the
+        compiled executables survive a maintenance rebind: the cached
+        shard_map functions take the arrays as arguments, so as long as
+        the shard capacities are stable (they derive from the flush
+        capacities) the new arrays hit the existing traces.  The cache
+        must drop only when ``n_vertices`` moves — it is baked into the
+        traced bodies (IDENTITY)."""
+        self.sharded = shard_index(index, self.n_shards)
+        if index.n_vertices != self.n_vertices:
+            self.n_vertices = index.n_vertices
+            self._cache.clear()
+
+    def _compiled(self, shape, caps):
+        key = (shape, caps)
+        fn = self._cache.get(key)
+        if fn is not None:
+            return fn
+        n_shards, axis, n_vertices = self.n_shards, self.axis, self.n_vertices
+        specs = self._specs
+
+        def body(arrs: ShardedIndexArrays, ranges):
+            local = ShardedIndexArrays(*[
+                leaf[0] if spec == P(axis) else leaf
+                for leaf, spec in zip(arrs, specs)])
+            ops = ShardedOps(local, n_vertices, n_shards, axis)
+            pairs, ovf = B.run_plan_ops(ops, shape, caps, ranges)
+            return (tuple(c[None] for c in pairs.cols), pairs.count[None],
+                    ovf[None])
+
+        sh = P(axis)
+        fn = jax.jit(compat.shard_map(
+            body, mesh=self.mesh, in_specs=(specs, P()),
+            out_specs=((sh, sh), sh, sh)))
+        self._cache[key] = fn
+        return fn
+
+    def run(self, shape, caps: B.QueryCaps, ranges: np.ndarray):
+        fn = self._compiled(shape, caps)
+        with compat.set_mesh(self.mesh):
+            cols, counts, ovf = fn(self.sharded, jnp.asarray(ranges))
+        if np.asarray(ovf).any():
+            return None, True
+        return self._gather_rows(cols, counts), False
+
+    def run_batch(self, shape, caps: B.QueryCaps, ranges: np.ndarray):
+        # lanes share one compiled executable; each dispatches its own
+        # shard_map (collectives don't vmap portably across jax versions)
+        results, overflow = [], []
+        for lane in range(ranges.shape[0]):
+            rows, ovf = self.run(shape, caps, ranges[lane])
+            results.append(rows)
+            overflow.append(ovf)
+        return results, np.asarray(overflow, bool)
+
+    def _gather_rows(self, cols, counts) -> np.ndarray:
+        v, u = np.asarray(cols[0]), np.asarray(cols[1])
+        cnt = np.asarray(counts)
+        rows = np.concatenate([
+            np.stack([v[s, :cnt[s]], u[s, :cnt[s]]], axis=1)
+            for s in range(self.n_shards)]) if self.n_shards else \
+            np.zeros((0, 2), np.int32)
+        return rows[np.lexsort((rows[:, 1], rows[:, 0]))]

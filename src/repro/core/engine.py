@@ -1,201 +1,36 @@
-"""Device query processing with CPQx — Algorithms 3 & 4 on TPU.
+"""Device query processing with CPQx — Algorithms 3 & 4, backend-agnostic.
 
-The host plans (``core.query.plan_query``) and the device executes.  A
+The host plans (``core.query.plan_query``) and a *backend* executes.  A
 plan is compiled once per (plan shape, capacity profile) — plans are
 nested tuples, hence hashable jit keys; the per-query *data* (the
 (start, len) ranges of each LOOKUP) streams in as traced scalars, so ten
 queries of the same template hit one executable.
 
-Evaluation is two-stage exactly as in the paper:
-  * class space: LOOKUP returns sorted class-id lists; CONJUNCTION is a
-    sorted intersection of class ids (Prop. 4.1); IDENTITY is a gather of
-    the cycle-purity flag (classes are cycle-pure by construction).
-  * pair space: after any JOIN the evaluator materializes s-t pairs
-    (expansion join through I_c2p) and proceeds with sorted set algebra.
-
-Every relation is capacity-padded; ``execute`` retries with doubled
-capacities on overflow (the honest dynamic->static bridge).
+The physical algebra lives in ``core.backend`` (protocol + the
+single-device :class:`~repro.core.backend.LocalBackend`) and
+``core.distributed`` (:class:`~repro.core.distributed.ShardedBackend`,
+the same plan walker inside one ``shard_map`` over a mesh axis).  The
+:class:`Engine` here owns everything backend-independent: planning, the
+host-side capacity estimator, the sticky-overflow double-and-retry
+ladder, and plan-shape batching.  Constructing the engine with a
+``mesh`` serves the identical API off a sharded index.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import relational as R
-from .index import CPQxIndex, DeviceIndexArrays
+from .backend import (  # noqa: F401  (QueryCaps/run_plan* are public API)
+    ExecutionBackend,
+    LocalBackend,
+    QueryCaps,
+    _join_pairs,
+    default_caps,
+    run_plan,
+    run_plan_batch,
+)
+from .index import CPQxIndex
 from .query import CPQ, plan_query, plan_lookup_seqs, plan_shape
-from repro.kernels import ops as kops
-
-
-@dataclasses.dataclass(frozen=True)
-class QueryCaps:
-    """Static capacities of the compiled plan (jit key)."""
-
-    class_cap: int  # class-id sets
-    pair_cap: int  # materialized pair sets
-    join_cap: int  # expansion-join outputs (pre-dedup)
-
-    def doubled(self) -> "QueryCaps":
-        return QueryCaps(self.class_cap * 2, self.pair_cap * 2, self.join_cap * 2)
-
-
-def default_caps(index: CPQxIndex) -> QueryCaps:
-    n_pairs = max(16, int(index.arrays.pair_count))
-    n_cls = max(16, int(index.arrays.n_classes))
-    p2 = 1 << (n_pairs - 1).bit_length()
-    c2 = 1 << (n_cls - 1).bit_length()
-    return QueryCaps(class_cap=c2, pair_cap=p2, join_cap=2 * p2)
-
-
-# ---------------------------------------------------------------------- #
-# device operators
-# ---------------------------------------------------------------------- #
-
-
-def _lookup_classes(a: DeviceIndexArrays, start, length, cap: int) -> R.Relation:
-    idx = jnp.arange(cap, dtype=R.I32)
-    valid = idx < length
-    src = jnp.clip(start + idx, 0, a.l2c_cls.shape[0] - 1)
-    ids = jnp.where(valid, a.l2c_cls[src], R.SENTINEL)
-    ovf = length > cap
-    return R.Relation((ids,), jnp.minimum(length, cap).astype(R.I32), ovf)
-
-
-def _materialize(a: DeviceIndexArrays, classes: R.Relation, pair_cap: int) -> R.Relation:
-    """classes -> sorted distinct (v, u).  Classes are disjoint, so the
-    expansion introduces no duplicate pairs.  The gather pass is the
-    ``expand_join`` Pallas kernel (fused binary search + payload gather)."""
-    cid = jnp.clip(classes.cols[0], 0, a.class_starts.shape[0] - 2)
-    lo = a.class_starts[cid]
-    cnt = a.class_starts[cid + 1] - lo
-    cnt = jnp.where(R.valid_mask(classes), cnt, 0).astype(R.I32)
-    ends = jnp.cumsum(cnt, dtype=R.I32)
-    total = ends[-1]
-    v, u, _ = kops.expand_join_gather(
-        ends, lo, classes.cols[0], a.c2p_v, a.c2p_u, total, pair_cap
-    )
-    rel = R.Relation((v, u), jnp.minimum(total, pair_cap).astype(R.I32),
-                     classes.overflow | (total > pair_cap))
-    return R.rel_sort(rel, num_keys=2)
-
-
-def _join_pairs(a: R.Relation, b: R.Relation, join_cap: int, pair_cap: int) -> R.Relation:
-    """(v,u) ⋈ (x,y) on u == x -> distinct (v, y).  b sorted by (x, y)."""
-    out = R.expansion_join(a, b, a_on=[1], out_cols=[("a", 0), ("b", 1)],
-                           out_capacity=join_cap)
-    out = R.rel_unique(R.rel_sort(out, num_keys=2), 2)
-    # re-embed at pair_cap
-    idx = jnp.arange(pair_cap, dtype=R.I32)
-    m = idx < out.count
-    src = jnp.clip(idx, 0, out.capacity - 1)
-    cols = tuple(jnp.where(m, c[src], R.SENTINEL) for c in out.cols)
-    return R.Relation(cols, jnp.minimum(out.count, pair_cap).astype(R.I32),
-                      out.overflow | (out.count > pair_cap))
-
-
-def _conj_id_classes(a: DeviceIndexArrays, classes: R.Relation) -> R.Relation:
-    cyc = a.class_cyclic[jnp.clip(classes.cols[0], 0, a.class_cyclic.shape[0] - 1)]
-    keep = (cyc == 1) & R.valid_mask(classes)
-    return R.rel_compact(classes, keep)
-
-
-# ---------------------------------------------------------------------- #
-# plan executor (one jit per plan shape x caps)
-# ---------------------------------------------------------------------- #
-
-
-def _run_plan(a: DeviceIndexArrays, plan, caps: QueryCaps, n_vertices: int,
-              lookup_ranges: jax.Array):
-    """Execute a physical plan.  ``lookup_ranges``: (n_lookups, 2) int32 of
-    (start, len) per LOOKUP segment, in plan order.  Returns a pair
-    Relation (sorted distinct (v, u)) and the sticky overflow flag.
-
-    ``plan`` may be a frozen plan or its :func:`plan_shape` — the device
-    computation only depends on the shape (LOOKUP nodes carry their
-    segment count; the label values stream in via ``lookup_ranges``)."""
-    counter = [0]
-
-    def next_range():
-        i = counter[0]
-        counter[0] += 1
-        return lookup_ranges[i, 0], lookup_ranges[i, 1]
-
-    def as_pairs(res):
-        kind, rel = res
-        if kind == "classes":
-            return _materialize(a, rel, caps.pair_cap)
-        return rel
-
-    def ev(node):
-        kind = node[0]
-        if kind == "lookup":
-            nseg = node[1] if isinstance(node[1], int) else len(node[1])
-            start, length = next_range()
-            cur = ("classes", _lookup_classes(a, start, length, caps.class_cap))
-            for _ in range(nseg - 1):
-                start, length = next_range()
-                nxt = _lookup_classes(a, start, length, caps.class_cap)
-                cur = ("pairs", _join_pairs(as_pairs(cur),
-                                            _materialize(a, nxt, caps.pair_cap),
-                                            caps.join_cap, caps.pair_cap))
-            return cur
-        if kind == "identity":
-            v = jnp.arange(caps.pair_cap, dtype=R.I32)
-            m = v < n_vertices
-            col = jnp.where(m, v, R.SENTINEL)
-            return ("pairs", R.Relation((col, col),
-                                        jnp.asarray(min(n_vertices, caps.pair_cap), R.I32),
-                                        jnp.asarray(n_vertices > caps.pair_cap)))
-        if kind == "conj_id":
-            res = ev(node[1])
-            if res[0] == "classes":
-                return ("classes", _conj_id_classes(a, res[1]))
-            rel = res[1]
-            return ("pairs", R.rel_compact(rel, rel.cols[0] == rel.cols[1]))
-        left = ev(node[1])
-        right = ev(node[2])
-        if kind == "conj":
-            if left[0] == "classes" and right[0] == "classes":
-                # Prop. 4.1 on device: sorted-intersect Pallas kernel
-                lrel, rrel = left[1], right[1]
-                mask = kops.sorted_member_mask(rrel.cols[0], rrel.count,
-                                               lrel.cols[0])
-                out = R.rel_compact(lrel, mask > 0)
-                # an undersized RIGHT list means missing matches: sticky
-                out = R.Relation(out.cols, out.count,
-                                 out.overflow | rrel.overflow)
-                return ("classes", out)
-            return ("pairs", R.rel_intersect(as_pairs(left), as_pairs(right), 2))
-        if kind == "join":
-            return ("pairs", _join_pairs(as_pairs(left), as_pairs(right),
-                                         caps.join_cap, caps.pair_cap))
-        raise ValueError(kind)
-
-    res = ev(plan)
-    pairs = as_pairs(res)
-    return pairs, pairs.overflow
-
-
-run_plan = functools.partial(
-    jax.jit, static_argnames=("plan", "caps", "n_vertices"))(_run_plan)
-
-
-@functools.partial(jax.jit, static_argnames=("plan", "caps", "n_vertices"))
-def run_plan_batch(a: DeviceIndexArrays, plan, caps: QueryCaps,
-                   n_vertices: int, lookup_ranges: jax.Array):
-    """Batched :func:`run_plan`: ``lookup_ranges`` is (batch, n_lookups, 2)
-    and the whole batch evaluates through one vmapped dispatch of the same
-    executable a single query would use.  Returns a batched Relation
-    (cols (batch, cap)) and a per-query (batch,) overflow vector — each
-    lane's overflow is its own sticky flag, so the host retries only the
-    lanes that overflowed."""
-    return jax.vmap(lambda r: _run_plan(a, plan, caps, n_vertices, r))(
-        lookup_ranges)
 
 
 # ---------------------------------------------------------------------- #
@@ -207,8 +42,6 @@ def _pow2(n: int) -> int:
     return 1 << (max(1, int(n)) - 1).bit_length()
 
 
-
-
 def _has_identity(shape) -> bool:
     if shape[0] == "identity":
         return True
@@ -217,18 +50,29 @@ def _has_identity(shape) -> bool:
 
 
 class Engine:
-    """Query engine bound to a built index."""
+    """Query engine bound to a built index.
 
-    def __init__(self, index: CPQxIndex):
+    ``mesh``/``axis`` select the execution backend: ``None`` (default)
+    binds the single-device :class:`LocalBackend`; a mesh binds a
+    :class:`~repro.core.distributed.ShardedBackend` that shards the index
+    over the mesh axis and evaluates every plan inside one ``shard_map``.
+    Either way the public API — ``execute``, ``execute_batch``,
+    ``rebind`` — is identical, and answers are bit-identical.
+    """
+
+    def __init__(self, index: CPQxIndex, mesh=None, axis: str = "engine"):
+        self.mesh = mesh
+        self.axis = axis
         self.rebind(index)
 
     def rebind(self, index: CPQxIndex) -> None:
         """Swap in a new index (a maintenance flush or a rebuild) in
         place: re-pulls the host-side estimator mirrors and the default
-        caps.  Compiled executables are keyed on (plan shape, caps,
-        n_vertices) — not on the index identity — so traffic after a
-        rebind keeps hitting the same jit cache as long as the flushed
-        arrays keep their capacities."""
+        caps, and rebuilds the backend — for a mesh engine that reshards
+        the flushed arrays.  Compiled executables are keyed on (plan
+        shape, caps, n_vertices) — not on the index identity — so traffic
+        after a rebind keeps hitting the same jit cache as long as the
+        flushed arrays keep their capacities."""
         self.index = index
         self._available = index.available_seqs() if index.interests is not None else None
         # host mirrors for the adaptive capacity estimator: per-class pair
@@ -237,6 +81,18 @@ class Engine:
         self._class_sizes = starts[1:] - starts[:-1]
         self._l2c_host = np.asarray(index.arrays.l2c_cls, np.int64)
         self._default_caps = default_caps(index)  # one device sync, here
+        if self.mesh is None:
+            self.backend: ExecutionBackend = LocalBackend(
+                index.arrays, index.n_vertices)
+        else:
+            from .distributed import ShardedBackend  # engine <- distributed is one-way
+
+            prev = getattr(self, "backend", None)
+            if isinstance(prev, ShardedBackend) and prev.mesh is self.mesh:
+                prev.reshard(index)  # keep the compiled plan cache warm
+            else:
+                self.backend = ShardedBackend.from_index(
+                    index, self.mesh, axis=self.axis)
 
     def plan(self, q: CPQ):
         return plan_query(q, self.index.k, available=self._available)
@@ -279,12 +135,9 @@ class Engine:
         shape = plan_shape(plan)
         caps = caps or self.estimate_caps(ranges, shape)
         for attempt in range(max_retries):
-            pairs, overflow = run_plan(
-                self.index.arrays, shape, caps, self.index.n_vertices,
-                jnp.asarray(ranges),
-            )
-            if not bool(overflow):
-                return R.to_numpy(pairs)
+            rows, overflow = self.backend.run(shape, caps, ranges)
+            if not overflow:
+                return rows
             caps = self._escalate(caps, attempt)
         raise RuntimeError("query overflow not resolved after retries")
 
@@ -313,10 +166,10 @@ class Engine:
         a lane never pays for a much larger neighbor.  Buckets smaller
         than ``min_bucket`` merge upward into the next-larger caps rung
         (one dispatch beats a little lane padding).  Each group's lookup
-        ranges stack into a (batch, n_lookups, 2) array evaluated by a
-        single vmapped dispatch.  Overflow is tracked per lane: only the
-        queries whose own sticky flag tripped are retried, at doubled
-        capacities.
+        ranges stack into a (batch, n_lookups, 2) array evaluated by the
+        backend (one vmapped dispatch on the local backend).  Overflow is
+        tracked per lane: only the queries whose own sticky flag tripped
+        are retried, at doubled capacities.
 
         ``plans`` lets a caller with a plan cache (the service layer)
         skip re-planning; must align with ``queries``."""
@@ -364,15 +217,10 @@ class Engine:
             pending = np.asarray(members, np.int64)
             ranges = np.stack([all_ranges[i] for i in members])
             for attempt in range(max_retries):
-                rel, overflow = run_plan_batch(
-                    self.index.arrays, shape, grp_caps,
-                    self.index.n_vertices, jnp.asarray(ranges),
-                )
-                overflow = np.asarray(overflow)
-                ok = np.nonzero(~overflow)[0]
-                if ok.size:
-                    for lane, rows in zip(ok, R.batch_to_numpy(rel, lanes=ok)):
-                        results[pending[lane]] = rows
+                rows, overflow = self.backend.run_batch(shape, grp_caps, ranges)
+                for lane, r in enumerate(rows):
+                    if r is not None:
+                        results[pending[lane]] = r
                 if not overflow.any():
                     break
                 pending = pending[overflow]

@@ -178,15 +178,20 @@ class CPQxIndex:
 
 
 def _pull_seq_ranges(arrays: DeviceIndexArrays, k: int) -> dict:
+    """Host dict of seq -> (start, end) — on the build path and every
+    maintenance flush.  Vectorized: per-seq lengths come from one numpy
+    column reduction and the int conversion from one bulk ``tolist``
+    (python ints in C), instead of ~n*k numpy-scalar casts in a loop."""
     n = int(arrays.seq_count)
     table = np.asarray(arrays.seq_table)[:n]
-    starts = np.asarray(arrays.seq_starts)[:n]
-    ends = np.asarray(arrays.seq_ends)[:n]
-    out = {}
-    for i in range(n):
-        seq = tuple(int(x) for x in table[i] if x >= 0)
-        out[seq] = (int(starts[i]), int(ends[i]))
-    return out
+    lengths = (table >= 0).sum(axis=1).tolist()
+    rows = table.tolist()
+    starts = np.asarray(arrays.seq_starts)[:n].tolist()
+    ends = np.asarray(arrays.seq_ends)[:n].tolist()
+    return {
+        tuple(row[:ln]): (s, e)
+        for row, ln, s, e in zip(rows, lengths, starts, ends)
+    }
 
 
 def from_host_mirror(

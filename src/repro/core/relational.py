@@ -320,6 +320,10 @@ def expansion_join(
 _MIX_A = np.uint32(0x7FEB352D)
 _MIX_B = np.uint32(0x846CA68B)
 
+# the one shard-placement salt: device repartitioning (distributed) and
+# host partitioning (sharded_index) must hash identically
+SHARD_SALT = 0xB0C4
+
 
 def mix32(x: jax.Array, salt: int) -> jax.Array:
     """splitmix-style avalanche mix on uint32 lanes (wrapping arithmetic)."""

@@ -40,6 +40,13 @@ A graph update re-enters the service two ways:
   followed by ONE flush/rebind.  Reads submitted before a write are
   drained first, so the service serves a strict serializable history:
   every query sees exactly the writes applied before it was submitted.
+
+The service is backend-agnostic: an ``Engine`` constructed with a mesh
+(``Engine(index, mesh=...)`` — the sharded backend of
+``core.distributed``) serves the identical API and answers through this
+layer.  On the write path nothing changes either: ``Engine.rebind``
+re-shards the flushed arrays, and the epoch/caching machinery here never
+looks at the backend.
 """
 
 from __future__ import annotations

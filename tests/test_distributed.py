@@ -89,6 +89,102 @@ class TestDistributedEngine:
         """)
         assert "QUERY_OK" in out
 
+    def test_sharded_backend_whole_plans_8dev(self):
+        """The tentpole property at n_shards=8: whole plans (lookup,
+        materialize, join, conj, identity) through ``Engine(mesh=...)``
+        return bit-identical arrays to the local engine and set-identical
+        answers to the semantics oracle, including the batch path and the
+        reshard-on-rebind maintenance path."""
+        out = _run_with_devices("""
+            import numpy as np
+            from repro import compat
+            from repro.core import index as cindex, oracle
+            from repro.core.engine import Engine
+            from repro.core.maintenance import MaintainableIndex
+            from repro.core.query import (TEMPLATES, TEMPLATE_ARITY,
+                                          instantiate_template)
+            from repro.data.graphs import gmark_citation
+
+            g = gmark_citation(150, avg_degree=5, seed=2)
+            idx = cindex.build(g, 2)
+            mesh = compat.make_mesh((8,), ("engine",))
+            local, sharded = Engine(idx), Engine(idx, mesh=mesh)
+            rng = np.random.default_rng(5)
+            present = np.unique(g.lbl)
+            for name in sorted(TEMPLATES):
+                q = instantiate_template(
+                    name, rng.choice(present, TEMPLATE_ARITY[name]).tolist())
+                a, b = local.execute(q), sharded.execute(q)
+                assert a.shape == b.shape and np.array_equal(a, b), name
+                assert ({tuple(r) for r in b.tolist()}
+                        == oracle.cpq_eval(g, q)), name
+            qs = [instantiate_template(
+                      "S", rng.choice(present, 4).tolist())
+                  for _ in range(6)]
+            for x, y in zip(local.execute_batch(qs), sharded.execute_batch(qs)):
+                assert np.array_equal(x, y)
+            # maintenance: flush -> rebind reshards, answers track updates
+            mi = MaintainableIndex.build(g, 2)
+            se = Engine(mi.flush(), mesh=mesh)
+            mi.apply_updates([("insert_edge", 0, 7, 0),
+                              ("delete_edge", *map(int, g._base_edges()[0]))])
+            se.rebind(mi.flush())
+            q = instantiate_template("C2", rng.choice(present, 2).tolist())
+            assert ({tuple(r) for r in se.execute(q).tolist()}
+                    == oracle.cpq_eval(mi.g, q))
+            print("SHARDED_BACKEND_OK")
+        """)
+        assert "SHARDED_BACKEND_OK" in out
+
+    def test_bucket_overflow_flags_and_retry_recovers(self):
+        """Exchange-capacity overflow at the edges: an undersized
+        bucket_cap must raise the sticky flag (never silently drop rows),
+        and the host-side double-and-retry ladder must converge to the
+        exact join.  Also covers shard counts that don't divide the rows
+        and shards left empty by the hash."""
+        out = _run_with_devices("""
+            import jax.numpy as jnp, numpy as np
+            from repro import compat
+            from repro.core import distributed as D
+
+            mesh = compat.make_mesh((8,), ("engine",))
+            rng = np.random.default_rng(4)
+            # skewed: every a-row joins through key 0 -> one shard gets all
+            A = np.stack([np.arange(37, dtype=np.int32),
+                          np.zeros(37, np.int32)], 1)
+            B = np.unique(np.stack([np.zeros(29, np.int32),
+                          rng.integers(0, 50, 29).astype(np.int32)], 1),
+                          axis=0)
+            gt = sorted({(int(v), int(y)) for v, m in A for m2, y in B
+                         if m == m2})
+            # shard by the (constant) join key: every row lands on one
+            # shard, so its exchange bucket holds all 37 rows -> overflow
+            a_blocks, a_counts = D.shard_relation(A, 8, 64, key_col=1)
+            b_blocks, b_counts = D.shard_relation(B, 8, 64, key_col=0)
+            assert (a_counts == 0).sum() == 7  # skew leaves 7 shards empty
+            a_cols = tuple(jnp.asarray(a_blocks[:, :, j]) for j in range(2))
+            b_cols = tuple(jnp.asarray(b_blocks[:, :, j]) for j in range(2))
+            bucket_cap, rows = 8, None  # far below the 37-row hot bucket
+            for attempt in range(6):
+                join = D.make_distributed_join(mesh, "engine", 8, 2, 2,
+                                               bucket_cap=bucket_cap,
+                                               out_cap=4096)
+                with compat.set_mesh(mesh):
+                    oc, on, ovf = join(a_cols, jnp.asarray(a_counts),
+                                       b_cols, jnp.asarray(b_counts))
+                if not np.asarray(ovf).any():
+                    ov, ou = np.asarray(oc[0]), np.asarray(oc[1])
+                    cnt = np.asarray(on)
+                    rows = sorted({(int(ov[s, i]), int(ou[s, i]))
+                                   for s in range(8) for i in range(cnt[s])})
+                    break
+                bucket_cap *= 2
+            assert attempt > 0, "undersized bucket must flag overflow"
+            assert rows == gt, (len(rows or []), len(gt))
+            print("BUCKET_RETRY_OK", attempt, bucket_cap)
+        """)
+        assert "BUCKET_RETRY_OK" in out
+
     def test_compressed_allreduce(self):
         out = _run_with_devices("""
             import jax, jax.numpy as jnp, numpy as np

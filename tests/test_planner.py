@@ -113,7 +113,7 @@ class TestLookupOrderContract:
 
     @staticmethod
     def _consumption_order(plan):
-        """Mirror of the executor's traversal in core.engine._run_plan:
+        """Mirror of the executor's traversal in core.backend.run_plan_ops:
         a lookup node consumes one range per segment in list order;
         conj/join evaluate left then right; conj_id recurses."""
         out = []

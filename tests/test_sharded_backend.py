@@ -1,0 +1,144 @@
+"""ShardedBackend parity — in-process, over every visible device.
+
+The whole-plan sharded executor (replicated class space, canonical
+hash-partitioned pair space, psum'd overflow) runs fine on a mesh of one
+device — every exchange is a self-send — so the full equivalence matrix
+``ShardedBackend == LocalBackend == numpy oracle`` is checked here
+without subprocess machinery.  The mesh spans ``jax.device_count()``
+devices: 1 in the plain tier-1 run, 8 in the CI distributed step
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — the
+acceptance matrix at n_shards ∈ {1, 8}.  test_distributed.py
+additionally covers the 8-device path from inside the plain suite via
+subprocesses."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import index as cindex, oracle
+from repro.core.backend import LocalBackend
+from repro.core.distributed import ShardedBackend
+from repro.core.engine import Engine, QueryCaps
+from repro.core.graph import LabeledGraph, example_graph
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import (
+    TEMPLATE_ARITY,
+    TEMPLATES,
+    instantiate_template,
+    parse,
+)
+from repro.core.service import QueryService
+
+from conftest import random_graph
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    """All visible devices on one 'engine' axis (1 normally; 8 in the
+    CI distributed step)."""
+    return compat.make_mesh((jax.device_count(),), ("engine",))
+
+
+def _rows_set(rows):
+    return {tuple(r) for r in np.asarray(rows).tolist()}
+
+
+class TestShardedEngineParity:
+    def test_template_suite_bit_identical(self, ex_graph, mesh1):
+        """Every Fig. 5 template: the mesh engine returns the *same
+        array* (values and order) as the local engine, and the right
+        answer."""
+        idx = cindex.build(ex_graph, 2)
+        local = Engine(idx)
+        sharded = Engine(idx, mesh=mesh1)
+        assert isinstance(local.backend, LocalBackend)
+        assert isinstance(sharded.backend, ShardedBackend)
+        rng = np.random.default_rng(7)
+        present = np.unique(ex_graph.lbl)
+        for name in TEMPLATES:
+            q = instantiate_template(
+                name, rng.choice(present, TEMPLATE_ARITY[name]).tolist())
+            a, b = local.execute(q), sharded.execute(q)
+            assert a.shape == b.shape and np.array_equal(a, b), name
+            assert _rows_set(b) == oracle.cpq_eval(ex_graph, q), name
+
+    def test_identity_and_parse_paths(self, ex_graph, mesh1):
+        idx = cindex.build(ex_graph, 2)
+        local, sharded = Engine(idx), Engine(idx, mesh=mesh1)
+        for text in ("id", "l0 & id", "(l0 . l1) & id", "l0 . id . l1"):
+            q = parse(text, None, ex_graph.n_labels)
+            a, b = local.execute(q), sharded.execute(q)
+            assert np.array_equal(a, b), text
+            assert _rows_set(b) == oracle.cpq_eval(ex_graph, q), text
+
+    def test_batch_matches_sequential(self, ex_graph, mesh1):
+        idx = cindex.build(ex_graph, 2)
+        sharded = Engine(idx, mesh=mesh1)
+        rng = np.random.default_rng(3)
+        present = np.unique(ex_graph.lbl)
+        qs = [instantiate_template("T", rng.choice(present, 3).tolist())
+              for _ in range(5)]
+        qs += [instantiate_template("C2", rng.choice(present, 2).tolist())
+               for _ in range(3)]
+        batch = sharded.execute_batch(qs)
+        for q, rows in zip(qs, batch):
+            assert np.array_equal(rows, sharded.execute(q))
+
+    def test_overflow_ladder_retries_to_exact(self, ex_graph, mesh1):
+        """Deliberately tiny caps: the psum'd sticky flag must drive the
+        host double-and-retry to the exact answer, same as local."""
+        idx = cindex.build(ex_graph, 2)
+        sharded = Engine(idx, mesh=mesh1)
+        q = parse("l0 . l1", None, ex_graph.n_labels)
+        tiny = QueryCaps(class_cap=2, pair_cap=2, join_cap=2)
+        rows = sharded.execute(q, caps=tiny)
+        assert _rows_set(rows) == oracle.cpq_eval(ex_graph, q)
+
+
+class TestShardedService:
+    def test_service_and_write_path_reshard(self, mesh1):
+        """QueryService over a mesh engine: same serving semantics, and
+        the maintenance write path (mirror batch -> flush -> rebind)
+        reshards the flushed arrays — answers track the updated graph."""
+        g = example_graph()
+        mi = MaintainableIndex.build(g, 2)
+        engine = Engine(mi.flush(), mesh=mesh1)
+        svc = QueryService(engine, maintainer=mi)
+        q = parse("l0 . l1", None, g.n_labels)
+        before = svc.query(q)
+        assert _rows_set(before) == oracle.cpq_eval(g, q)
+        old_backend = engine.backend
+        old_arrays = old_backend.sharded
+        old_compiled = dict(old_backend._cache)
+
+        svc.apply_updates([("insert_edge", 0, 3, 0), ("delete_edge", 0, 1, 0)])
+        after = svc.query(q)  # drain applies updates, flush reshards
+        # rebind resharded *into* the same backend: new arrays, but the
+        # compiled plan executables survive the flush
+        assert engine.backend is old_backend
+        assert engine.backend.sharded is not old_arrays
+        for key, fn in old_compiled.items():
+            assert engine.backend._cache.get(key) is fn
+        assert _rows_set(after) == oracle.cpq_eval(mi.g, q)  # updated graph
+        assert svc.stats.update_batches == 1
+        # epoch bumped: the pre-update cached answer is unreachable
+        assert svc.graph_epoch >= 1
+
+    def test_random_graphs_seeded_sweep(self, mesh1):
+        """Deterministic cousin of the hypothesis property (which lives
+        in test_sharded_properties.py): a seeded sweep of random graphs
+        through a random template each, sharded == local == oracle."""
+        for seed in range(4):
+            g = random_graph(seed, n_max=14, m_max=36)
+            idx = cindex.build(g, 2)
+            local, sharded = Engine(idx), Engine(idx, mesh=mesh1)
+            rng = np.random.default_rng(seed)
+            present = np.unique(g.lbl)
+            names = sorted(TEMPLATES)
+            name = names[int(rng.integers(len(names)))]
+            q = instantiate_template(
+                name, rng.choice(present, TEMPLATE_ARITY[name]).tolist())
+            a, b = local.execute(q), sharded.execute(q)
+            assert np.array_equal(a, b), (seed, name)
+            assert _rows_set(b) == oracle.cpq_eval(g, q), (seed, name)

@@ -1,0 +1,149 @@
+"""Sharded index layout tests — host-side partitioning and the
+shard/gather round-trip.  These run on the single real CPU device: the
+layout math (hash placement, per-shard CSR, grow-and-retry) is pure
+numpy; device-mesh execution is covered by test_sharded_backend (1
+shard, in-process) and test_distributed (8 fake devices, subprocess)."""
+
+import numpy as np
+import pytest
+
+from repro.core import distributed as D
+from repro.core import index as cindex
+from repro.core import relational as R
+from repro.core.graph import example_graph
+from repro.core.sharded_index import (
+    gather_index,
+    hash_buckets,
+    partition_rows,
+    shard_index,
+)
+
+
+def _rand_rows(n, hi=40, arity=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(0, hi, (n, arity)).astype(np.int32), axis=0)
+
+
+class TestPartitionRows:
+    def test_matches_legacy_per_shard_loop(self):
+        """The vectorized partitioner reproduces the original per-shard
+        sort loop exactly: same placement (device-compatible hash), same
+        within-shard lexicographic order, same padding."""
+        rows = _rand_rows(300)
+        n_shards = 8
+        bucket = hash_buckets(rows, (0,), n_shards)
+        blocks, counts, cap = partition_rows(rows, n_shards, 128)
+        assert cap == 128
+        for b in range(n_shards):
+            rb = rows[bucket == b]
+            rb = rb[np.lexsort((rb[:, 2], rb[:, 1], rb[:, 0]))]
+            assert counts[b] == rb.shape[0]
+            assert np.array_equal(blocks[b, : rb.shape[0]], rb)
+            assert np.all(blocks[b, rb.shape[0]:] == R.SENTINEL)
+
+    def test_indivisible_row_count_and_empty_shards(self):
+        """n_shards neither divides the row count nor receives rows on
+        every shard — tiny inputs leave some shards empty."""
+        rows = _rand_rows(5, hi=4, seed=3)  # 5 rows over 8 shards
+        blocks, counts, _ = partition_rows(rows, 8, 16)
+        assert counts.sum() == rows.shape[0]
+        assert (counts == 0).any()  # pigeonhole: at least 3 empty shards
+        got = np.concatenate([blocks[s, : counts[s]] for s in range(8)])
+        got = got[np.lexsort((got[:, 2], got[:, 1], got[:, 0]))]
+        assert np.array_equal(got, rows[np.lexsort(
+            (rows[:, 2], rows[:, 1], rows[:, 0]))])
+
+    def test_zero_rows(self):
+        blocks, counts, _ = partition_rows(np.zeros((0, 3), np.int32), 4, 8)
+        assert blocks.shape == (4, 8, 3)
+        assert counts.sum() == 0
+        assert np.all(blocks == R.SENTINEL)
+
+    def test_overflow_grows_and_retries(self):
+        """A skewed shard outgrowing the requested capacity doubles the
+        block capacity instead of failing (the host twin of the device
+        overflow ladder); grow=False restores the fail-fast error."""
+        rows = np.stack([np.full(50, 7, np.int32),  # all on one shard
+                         np.arange(50, dtype=np.int32),
+                         np.arange(50, dtype=np.int32)], axis=1)
+        blocks, counts, cap = partition_rows(rows, 4, 16)
+        assert cap == 64 and blocks.shape[1] == 64  # 16 -> 32 -> 64
+        assert counts.max() == 50
+        with pytest.raises(ValueError, match="shard overflow"):
+            partition_rows(rows, 4, 16, grow=False)
+
+    def test_shard_relation_wrapper_grows(self):
+        rows = np.stack([np.full(40, 3, np.int32),
+                         np.arange(40, dtype=np.int32)], axis=1)
+        blocks, counts = D.shard_relation(rows, 4, 8)
+        assert blocks.shape[1] == 64 and counts.max() == 40
+
+    def test_multi_column_key_spreads_pair_table(self):
+        """(v, u) hash-combined keys place rows with equal v on different
+        shards (unlike key_col=0) while keeping every row exactly once."""
+        v = np.zeros(64, np.int32)
+        rows = np.stack([v, np.arange(64, dtype=np.int32)], axis=1)
+        b0 = hash_buckets(rows, (0,), 8)
+        b01 = hash_buckets(rows, (0, 1), 8)
+        assert len(set(b0.tolist())) == 1
+        assert len(set(b01.tolist())) > 1
+        blocks, counts, _ = partition_rows(rows, 8, 64, key_cols=(0, 1))
+        assert counts.sum() == 64
+
+
+class TestHashParity:
+    def test_host_bucket_matches_device_bucket(self):
+        """The documented invariant 'host placement == device
+        repartitioning': hash_buckets on the host and _bucket_of on the
+        device must place every key identically (they share
+        relational.mix32's constants and SHARD_SALT)."""
+        import jax.numpy as jnp
+
+        keys = np.concatenate([np.arange(512, dtype=np.int32),
+                               np.array([0, 1, 2**30, 2**31 - 2], np.int32)])
+        for n_shards in (1, 3, 8):
+            host = hash_buckets(keys.reshape(-1, 1), (0,), n_shards)
+            dev = np.asarray(D._bucket_of(jnp.asarray(keys), n_shards))
+            assert np.array_equal(host, dev.astype(np.int64)), n_shards
+
+
+class TestShardGatherRoundTrip:
+    @pytest.mark.parametrize("n_shards", [1, 3, 8])
+    def test_round_trip_is_bit_identical(self, n_shards):
+        idx = cindex.build(example_graph(), 2)
+        sharded = shard_index(idx, n_shards)
+        assert sharded.n_shards == n_shards
+        assert int(np.asarray(sharded.c2p_counts).sum()) == idx.n_pairs
+        assert int(np.asarray(sharded.pair_counts).sum()) == idx.n_pairs
+        back = gather_index(sharded, pair_cap=int(idx.arrays.c2p_v.shape[0]))
+        for f in ("pair_v", "pair_u", "pair_cls", "c2p_cls", "c2p_v",
+                  "c2p_u", "class_starts", "class_cyclic", "l2c_cls",
+                  "seq_table", "seq_starts", "seq_ends"):
+            a = np.asarray(getattr(idx.arrays, f))
+            b = np.asarray(getattr(back, f))
+            assert np.array_equal(a, b), f
+        assert int(back.pair_count) == idx.n_pairs
+        assert int(back.n_classes) == idx.n_classes
+
+    def test_classes_stay_whole(self):
+        """Class-hash sharding keeps each equivalence class on exactly
+        one shard, and the per-shard CSR ranges tile each shard's rows."""
+        idx = cindex.build(example_graph(), 2)
+        sharded = shard_index(idx, 4)
+        ccls = np.asarray(sharded.c2p_cls)
+        counts = np.asarray(sharded.c2p_counts)
+        owner: dict = {}
+        for s in range(4):
+            for c in np.unique(ccls[s, : counts[s]]):
+                assert int(c) not in owner, "class split across shards"
+                owner[int(c)] = s
+        assert len(owner) == idx.n_classes
+        starts = np.asarray(sharded.class_starts)
+        for s in range(4):
+            sizes = starts[s, 1:] - starts[s, :-1]
+            assert sizes.sum() == counts[s]
+            for c, sz in enumerate(sizes):
+                if sz:
+                    assert owner[c] == s
+                    seg = ccls[s, starts[s, c]: starts[s, c + 1]]
+                    assert np.all(seg == c)
