@@ -1,27 +1,51 @@
 """Shared benchmark plumbing: datasets scaled for CPU CI, timing
 helpers, CSV emission.  Every bench prints ``name,us_per_call,derived``
 rows so ``python -m benchmarks.run`` produces one machine-readable
-stream (deliverable (d): one bench per paper table/figure)."""
+stream (deliverable (d): one bench per paper table/figure); the same
+rows accumulate in :data:`RESULTS` so a driver can serialize the run
+(``python -m benchmarks.run --json out.json`` — the CI perf-trajectory
+artifact)."""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
 
 import numpy as np
 
 from repro.core.graph import LabeledGraph, example_graph
-from repro.data.graphs import gmark_citation, powerlaw_graph
+from repro.data.graphs import gmark_citation, powerlaw_graph, skewed_labeled_graph
 
 # CPU-scaled stand-ins for the paper's dataset suite (Table II): same
 # generator *families* (social-like powerlaw with exponential labels;
-# gMark citation schema), sized for CI.
+# gMark citation schema), sized for CI.  "skewed-hub" is the optimizer's
+# adversarial workload: one hub label carries most edges (bench_query's
+# optimized-vs-syntactic gate, bench_pruning's skew section).
 DATASETS = {
     "robots-like": lambda: powerlaw_graph(300, 1200, n_labels=4, seed=1),
     "advogato-like": lambda: powerlaw_graph(600, 4000, n_labels=4, seed=2),
     "gmark-small": lambda: gmark_citation(500, avg_degree=6, seed=3),
     "gmark-medium": lambda: gmark_citation(1500, avg_degree=6, seed=4),
+    "skewed-hub": lambda: skewed_labeled_graph(seed=5),
     "example": example_graph,
 }
+
+#: Every ``emit`` row of the process, in order — the machine-readable
+#: twin of the CSV stream on stdout.
+RESULTS: list[dict] = []
+
+
+def write_json(path: str, **meta) -> None:
+    """Serialize everything emitted so far (plus ``meta``) to ``path``."""
+    payload = {
+        "meta": {"platform": platform.platform(),
+                 "python": platform.python_version(), **meta},
+        "rows": RESULTS,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+    print(f"# wrote {len(RESULTS)} rows to {path}", flush=True)
 
 TEMPLATE_NAMES = ["C2", "C4", "C2i", "T", "Ti", "S", "Si", "TT", "St",
                   "TC", "SC", "ST"]
@@ -40,4 +64,6 @@ def timeit(fn, warmup: int = 1, iters: int = 3) -> float:
 
 
 def emit(name: str, us: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": round(float(us), 1),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}")

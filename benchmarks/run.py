@@ -3,8 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows.  CPU-scaled datasets from
 the same generator families as the paper's suite; correctness gates
 (all methods agree with the semantics oracle) run inside each bench.
+``--json`` additionally serializes every emitted row (plus platform
+metadata and the failure list) — CI uploads that file as the
+perf-trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6 table4 ...]
+                                           [--json out.json]
 """
 
 from __future__ import annotations
@@ -29,6 +33,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {sorted(BENCHES)}")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="serialize all emitted rows to PATH")
     args = ap.parse_args()
     todo = args.only or list(BENCHES)
     print("name,us_per_call,derived")
@@ -41,10 +47,20 @@ def main() -> None:
             mod = __import__(mod_name, fromlist=["main"])
             mod.main()
             print(f"# {key} done in {time.time()-t1:.1f}s", file=sys.stderr)
+        except SystemExit as e:  # a bench's own acceptance gate tripped
+            if e.code:
+                failed.append(key)
+                print(f"# {key} FAILED: exit {e.code}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failed.append(key)
             print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
-    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+    elapsed = time.time() - t0
+    print(f"# total {elapsed:.1f}s", file=sys.stderr)
+    if args.json:
+        from benchmarks.common import write_json
+
+        write_json(args.json, benches=todo, failed=failed,
+                   elapsed_s=round(elapsed, 1))
     if failed:
         raise SystemExit(f"benches failed: {failed}")
 

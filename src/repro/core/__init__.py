@@ -1,5 +1,7 @@
 """The paper's contribution: CPQ-aware path indexing (CPQx / iaCPQx),
 the capacity-padded relational substrate, the backend-agnostic query
 engine (``backend`` — local; ``distributed`` — whole plans inside
-shard_map over a ``sharded_index`` layout), lazy maintenance, baselines,
-and the semantics oracle."""
+shard_map over a ``sharded_index`` layout), the cost-based optimizer
+(``optimizer`` over the ``stats`` view), lazy maintenance, baselines,
+and the semantics oracle.  ``docs/ARCHITECTURE.md`` maps how the
+modules fit together."""

@@ -29,9 +29,23 @@ Evaluation is two-stage exactly as in the paper:
   * pair space: after any JOIN the evaluator materializes s-t pairs
     (expansion join through I_c2p) and proceeds with sorted set algebra.
 
-Every relation is capacity-padded; backends surface a sticky overflow
-flag and the host driver retries with doubled capacities (the honest
-dynamic->static bridge).
+The overflow-ladder contract (canonical statement — ``core.engine``,
+``core.distributed`` and the capacity estimators all defer here):
+every relation is capacity-padded, and any operator that would drop
+rows sets a *sticky* overflow flag that propagates to the plan's final
+result instead of raising.  The host driver is the only party that
+reacts: it re-runs the whole plan with every capacity doubled, and
+after three doublings from a (possibly far-too-tight) estimate it
+jumps to at least the worst-case ``default_caps`` so the ladder cannot
+exhaust below where a stats-free engine would have started.  All
+capacities live on the power-of-two ladder, so retried plans land on
+already-compiled executables.  Variations are mechanical, not
+semantic: the batched path keeps one sticky flag per lane and retries
+only the lanes that tripped; the sharded backend psum-reduces per-shard
+flags so every shard and the host agree on the same retry decision.
+This is the honest dynamic->static bridge — estimates and optimizer
+cost models can be arbitrarily wrong about *sizes* without ever being
+wrong about *answers*.
 """
 
 from __future__ import annotations

@@ -20,7 +20,10 @@ Operators (all inside one shard_map):
 
 The fixed bucket capacity is the static-shape contract: each exchange
 moves (n_shards, bucket_cap, arity) per shard; overflow is flagged and
-the host retries with doubled capacity exactly like the local engine.
+resolved by the ONE overflow-ladder contract specified in the
+``core.backend`` module docstring — this module adds nothing to it
+beyond psum-reducing the per-shard sticky flags so every shard and the
+host agree on a retry.
 
 Whole-plan execution
 --------------------
@@ -32,8 +35,13 @@ replicated, pair-space relations hash-partitioned by source vertex (the
 canonical distribution: conjunctions and identity filters are then
 exchange-free; a join repartitions its probe side by the join key and
 its output back to canonical).  Per-shard sticky overflow flags are
-psum-reduced so every shard — and the host — agrees on retry, and the
-host doubles capacities exactly like the local engine.
+psum-reduced so every shard — and the host — agrees on retry.
+
+Planning (and the cost-based optimizer) stays a host concern: the
+backend carries the replicated :class:`~repro.core.stats.IndexStats`
+(``sharded_index.replicated_stats``) so any planner colocated with a
+shard sees the exact statistics the local engine would — plans, and
+therefore executables, are identical across backends.
 """
 
 from __future__ import annotations
@@ -54,6 +62,7 @@ from .sharded_index import (
     ShardedIndexArrays,
     index_specs,
     partition_rows,
+    replicated_stats,
     shard_index,
 )
 
@@ -352,7 +361,7 @@ class ShardedBackend(B.ExecutionBackend):
     output bit-for-bit (canonical pair rows are globally distinct)."""
 
     def __init__(self, sharded: ShardedIndexArrays, mesh, n_vertices: int,
-                 axis: str = "engine"):
+                 axis: str = "engine", k: int | None = None):
         n_mesh = int(dict(mesh.shape)[axis])
         if sharded.n_shards != n_mesh:
             raise ValueError(
@@ -363,14 +372,30 @@ class ShardedBackend(B.ExecutionBackend):
         self.axis = axis
         self.n_vertices = n_vertices
         self.n_shards = sharded.n_shards
+        self.k = k
+        self._stats = None  # lazy: see the `stats` property
         self._specs = index_specs(axis)
         self._cache: dict = {}
+
+    @property
+    def stats(self):
+        """The optimizer's statistics, reconstructed lazily from the
+        replicated leaves alone — identical to the local engine's (see
+        ``sharded_index.replicated_stats``; ``Engine`` plans from the
+        index it was bound to, so this view exists for planners that
+        only hold the sharded layout — a migration target, a remote
+        planner — and for the parity tests).  None when ``k`` is
+        unknown; invalidated by ``reshard``."""
+        if self._stats is None and self.k is not None:
+            self._stats = replicated_stats(self.sharded, self.n_vertices,
+                                           self.k)
+        return self._stats
 
     @classmethod
     def from_index(cls, index, mesh, axis: str = "engine") -> "ShardedBackend":
         n_shards = int(dict(mesh.shape)[axis])
         return cls(shard_index(index, n_shards), mesh, index.n_vertices,
-                   axis=axis)
+                   axis=axis, k=index.k)
 
     def reshard(self, index) -> None:
         """Re-shard a flushed/rebuilt index *into this backend* so the
@@ -379,8 +404,11 @@ class ShardedBackend(B.ExecutionBackend):
         the shard capacities are stable (they derive from the flush
         capacities) the new arrays hit the existing traces.  The cache
         must drop only when ``n_vertices`` moves — it is baked into the
-        traced bodies (IDENTITY)."""
+        traced bodies (IDENTITY).  The replicated statistics view is
+        invalidated with the arrays, mirroring ``Engine.rebind``."""
         self.sharded = shard_index(index, self.n_shards)
+        self.k = index.k
+        self._stats = None
         if index.n_vertices != self.n_vertices:
             self.n_vertices = index.n_vertices
             self._cache.clear()

@@ -1,7 +1,12 @@
 """Device query processing with CPQx — Algorithms 3 & 4, backend-agnostic.
 
-The host plans (``core.query.plan_query``) and a *backend* executes.  A
-plan is compiled once per (plan shape, capacity profile) — plans are
+The host plans and a *backend* executes.  Planning is cost-based by
+default: ``core.optimizer.optimize_query`` reorders join chains, splits
+and conjunctions using the exact cardinalities of
+:class:`~repro.core.stats.IndexStats` (pulled once per ``rebind``);
+``core.query.plan_query`` remains the stats-free syntactic fallback
+(``Engine(..., optimize=False)``), and is what the numpy oracle uses.
+A plan is compiled once per (plan shape, capacity profile) — plans are
 nested tuples, hence hashable jit keys; the per-query *data* (the
 (start, len) ranges of each LOOKUP) streams in as traced scalars, so ten
 queries of the same template hit one executable.
@@ -11,8 +16,9 @@ single-device :class:`~repro.core.backend.LocalBackend`) and
 ``core.distributed`` (:class:`~repro.core.distributed.ShardedBackend`,
 the same plan walker inside one ``shard_map`` over a mesh axis).  The
 :class:`Engine` here owns everything backend-independent: planning, the
-host-side capacity estimator, the sticky-overflow double-and-retry
-ladder, and plan-shape batching.  Constructing the engine with a
+host-side capacity estimator, the overflow retry schedule (the capacity
+ladder itself is specified once, in the ``core.backend`` module
+docstring), and plan-shape batching.  Constructing the engine with a
 ``mesh`` serves the identical API off a sharded index.
 """
 
@@ -30,7 +36,9 @@ from .backend import (  # noqa: F401  (QueryCaps/run_plan* are public API)
     run_plan_batch,
 )
 from .index import CPQxIndex
+from .optimizer import estimate_plan, optimize_query
 from .query import CPQ, plan_query, plan_lookup_seqs, plan_shape
+from .stats import IndexStats
 
 
 # ---------------------------------------------------------------------- #
@@ -58,28 +66,37 @@ class Engine:
     over the mesh axis and evaluates every plan inside one ``shard_map``.
     Either way the public API — ``execute``, ``execute_batch``,
     ``rebind`` — is identical, and answers are bit-identical.
+
+    ``optimize`` selects the planner: True (default) runs the cost-based
+    optimizer over the index statistics; False pins the syntactic
+    ``plan_query`` (the stats-free fallback — what the oracle and the
+    pre-PR-4 engine used), which benchmarks use as the baseline.
     """
 
-    def __init__(self, index: CPQxIndex, mesh=None, axis: str = "engine"):
+    def __init__(self, index: CPQxIndex, mesh=None, axis: str = "engine",
+                 optimize: bool = True):
         self.mesh = mesh
         self.axis = axis
+        self.optimize = optimize
         self.rebind(index)
 
     def rebind(self, index: CPQxIndex) -> None:
         """Swap in a new index (a maintenance flush or a rebuild) in
-        place: re-pulls the host-side estimator mirrors and the default
-        caps, and rebuilds the backend — for a mesh engine that reshards
-        the flushed arrays.  Compiled executables are keyed on (plan
-        shape, caps, n_vertices) — not on the index identity — so traffic
-        after a rebind keeps hitting the same jit cache as long as the
-        flushed arrays keep their capacities."""
+        place: re-pulls the host-side statistics view (optimizer +
+        capacity estimator) and the default caps, and rebuilds the
+        backend — for a mesh engine that reshards the flushed arrays.
+        Compiled executables are keyed on (plan shape, caps, n_vertices)
+        — not on the index identity — so traffic after a rebind keeps
+        hitting the same jit cache as long as the flushed arrays keep
+        their capacities."""
         self.index = index
         self._available = index.available_seqs() if index.interests is not None else None
-        # host mirrors for the adaptive capacity estimator: per-class pair
-        # counts and the l2c class table (a few KB — pulled once)
-        starts = np.asarray(index.arrays.class_starts, np.int64)
-        self._class_sizes = starts[1:] - starts[:-1]
-        self._l2c_host = np.asarray(index.arrays.l2c_cls, np.int64)
+        # the statistics view: per-class pair counts, the l2c class table
+        # and per-seq prefix sums (a few KB — pulled once per rebind, so
+        # a maintenance flush refreshes what the optimizer plans against)
+        self.stats = IndexStats.from_index(index)
+        self._class_sizes = self.stats.class_sizes
+        self._l2c_host = self.stats.l2c_cls
         self._default_caps = default_caps(index)  # one device sync, here
         if self.mesh is None:
             self.backend: ExecutionBackend = LocalBackend(
@@ -95,25 +112,47 @@ class Engine:
                     index, self.mesh, axis=self.axis)
 
     def plan(self, q: CPQ):
+        """Compile ``q`` to a physical plan: cost-optimized against the
+        index statistics by default, syntactic (``plan_query``) when the
+        engine was constructed with ``optimize=False``."""
+        if self.optimize:
+            return optimize_query(q, self.index.k, self.stats,
+                                  available=self._available)
         return plan_query(q, self.index.k, available=self._available)
 
-    def estimate_caps(self, ranges: np.ndarray, shape) -> QueryCaps:
-        """Optimistic per-query capacities from the host index stats: the
-        class cap covers the largest LOOKUP's class list, the pair cap a
-        2x headroom over the largest single-lookup materialization.  Far
-        tighter than :func:`default_caps` for typical template queries —
-        the sticky-overflow retry (which doubles along the same power-of-
-        two ladder, so executables are shared) keeps this exact."""
+    def estimate_caps(self, ranges: np.ndarray, shape,
+                      plan=None) -> QueryCaps:
+        """Optimistic per-query capacities from the host index stats.
+
+        With a ``plan``, the cost model walks it and sizes the pair cap
+        to 2x the largest *estimated intermediate* (for a class-space
+        conjunction that is a sound upper bound — the min operand — so a
+        selective conjunction gets caps near its answer instead of near
+        its largest lookup).  Without one, the stats-free fallback keeps
+        the PR-1 behavior: 2x the largest single-lookup materialization.
+        Either way the class cap covers the largest LOOKUP's class list
+        exactly, and the sticky-overflow retry (doubling along the same
+        power-of-two ladder, so executables are shared) keeps undersized
+        estimates exact."""
         max_classes, max_pairs = 1, 1
         for start, length in np.asarray(ranges, np.int64).reshape(-1, 2):
             max_classes = max(max_classes, int(length))
-            cls = self._l2c_host[start: start + length]
-            max_pairs = max(max_pairs, int(self._class_sizes[cls].sum()))
+            if plan is None:  # the cost model supersedes the per-leaf sum
+                cls = self._l2c_host[start: start + length]
+                max_pairs = max(max_pairs, int(self._class_sizes[cls].sum()))
+        headroom = 2
+        if plan is not None:
+            est = estimate_plan(plan, self.stats)
+            max_pairs = int(max(est.max_pairs, est.pairs))
+            # conjunction bounds are exact (min operand) but join outputs
+            # are uniform-fanout *estimates* — give plans with pair-space
+            # joins double the headroom so skewed fanout rarely ladders
+            headroom = 4 if est.max_join > 0 else 2
         floor = self.index.n_vertices if _has_identity(shape) else 0
         # never *start* above the worst-case default (the retry ladder can
         # still climb past it if a join genuinely needs more)
         ceiling = max(self._default_caps.pair_cap, _pow2(floor))
-        pair_cap = min(_pow2(max(64, 2 * max_pairs, floor)), ceiling)
+        pair_cap = min(_pow2(max(64, headroom * max_pairs, floor)), ceiling)
         return QueryCaps(class_cap=_pow2(max(16, max_classes)),
                          pair_cap=pair_cap, join_cap=2 * pair_cap)
 
@@ -128,12 +167,13 @@ class Engine:
         return ranges
 
     def execute(self, q: CPQ, caps: QueryCaps | None = None,
-                max_retries: int = 8) -> np.ndarray:
+                max_retries: int = 10) -> np.ndarray:
         """Evaluate ⟦q⟧_G; returns (n, 2) numpy array of s-t pairs."""
         plan = self.plan(q)
         ranges = self.lookup_ranges(plan)
         shape = plan_shape(plan)
-        caps = caps or self.estimate_caps(ranges, shape)
+        caps = caps or self.estimate_caps(ranges, shape,
+                                          plan if self.optimize else None)
         for attempt in range(max_retries):
             rows, overflow = self.backend.run(shape, caps, ranges)
             if not overflow:
@@ -142,12 +182,19 @@ class Engine:
         raise RuntimeError("query overflow not resolved after retries")
 
     def _escalate(self, caps: QueryCaps, attempt: int) -> QueryCaps:
-        """Overflow-retry schedule: double, but after two failed attempts
-        from a (possibly far-too-tight) estimate jump to at least the
-        worst-case default so the ladder can't exhaust below the caps the
-        pre-estimator engine would have started from."""
+        """Overflow-retry schedule (the host half of the ladder contract
+        in the ``core.backend`` docstring): double, and after a few
+        failed attempts from a (possibly far-too-tight) estimate jump to
+        at least the worst-case default so the ladder can't exhaust
+        below the caps the pre-estimator engine would have started from.
+        Early rungs are cheap (small executables), the default rung is
+        not — so the jump waits for three doublings, which lets a mildly
+        undersized estimate land on a right-sized rung instead of paying
+        the worst-case dispatch.  (The default ``max_retries`` is 10 so
+        the reachable ceiling past the jump — default x 2^6 — matches
+        the pre-optimizer schedule's.)"""
         caps = caps.doubled()
-        if attempt >= 1:
+        if attempt >= 3:
             d = self._default_caps
             caps = QueryCaps(max(caps.class_cap, d.class_cap),
                              max(caps.pair_cap, d.pair_cap),
@@ -155,7 +202,7 @@ class Engine:
         return caps
 
     def execute_batch(self, queries, caps: QueryCaps | None = None,
-                      max_retries: int = 8, plans: list | None = None,
+                      max_retries: int = 10, plans: list | None = None,
                       min_bucket: int = 4) -> list:
         """Evaluate many queries; returns one (n, 2) array per query, in
         input order.
@@ -182,7 +229,8 @@ class Engine:
         shape_groups: dict = {}
         for i, p in enumerate(plans):
             shape = plan_shape(p)
-            e = caps or self.estimate_caps(all_ranges[i], shape)
+            e = caps or self.estimate_caps(all_ranges[i], shape,
+                                           p if self.optimize else None)
             shape_groups.setdefault(shape, {}).setdefault(e, []).append(i)
 
         work: list = []  # (shape, caps, member indices)

@@ -237,10 +237,19 @@ class MaintainableIndex:
     def insert_vertex(self, edges: list) -> None:
         self.apply_updates([("insert_vertex", list(edges))])
 
+    def _require_interest_aware(self, op: str) -> None:
+        """Interest updates are an iaCPQx API — a real precondition for
+        callers, not an internal invariant, so violating it raises
+        ``ValueError`` (asserts vanish under ``python -O``)."""
+        if self.index.interests is None:
+            raise ValueError(
+                f"{op} requires an interest-aware index — build with "
+                "MaintainableIndex.build(g, k, interests=[...])")
+
     def delete_interest(self, seq: tuple) -> None:
         """Sec. V-C: drop one interest sequence — just remove the l2c entry
         (classes stay split; lazily correct)."""
-        assert self.index.interests is not None
+        self._require_interest_aware("delete_interest")
         seq = tuple(seq)
         self.index.l2c.pop(seq, None)
         self.index.interests = frozenset(self.index.interests - {seq})
@@ -248,7 +257,7 @@ class MaintainableIndex:
     def insert_interest(self, seq: tuple) -> None:
         """Sec. V-C: add an interest sequence — enumerate its pairs and
         re-insert them with fresh (now seq-aware) classes."""
-        assert self.index.interests is not None
+        self._require_interest_aware("insert_interest")
         seq = tuple(seq)
         self.index.interests = frozenset(self.index.interests | {seq})
         seqs = oracle.enumerate_pairs(self.g, self.index.k)

@@ -1,0 +1,347 @@
+"""Cost-based CPQ query optimizer — statistics-aware planning.
+
+``core.query.plan_query`` is purely *syntactic*: it splits label chains
+greedily left-to-right and keeps operands in source order.  Which side of
+a join expands first and which LOOKUP a conjunction probes decides
+whether CPQx prunes by orders of magnitude or degenerates toward the
+baseline (Sec. IV-D/VI), so this module re-plans with the exact
+cardinalities the index already holds (:class:`repro.core.stats.
+IndexStats` — class-list lengths from ``I_l2c``, per-class pair counts
+from the ``I_c2p`` CSR offsets):
+
+* **segment splits** — a label chain is split into the valid <= k
+  segmentation with the cheapest estimated evaluation, enumerated among
+  all compositions (bounded; greedy fallback past
+  :data:`MAX_SPLIT_ENUM`), not just the greedy longest-prefix one.  A
+  run that fits one indexed segment is always taken whole: its
+  materialization *is* the answer, so no split can beat it.
+* **conjunction ordering** — CONJ is commutative; operands are ordered
+  smallest-estimate-first so the sorted-intersect kernel probes the
+  small side and intermediate caps track the selective operand.
+* **join association** — composition is associative; flattened join
+  chains are re-associated by an interval DP (matrix-chain style) over
+  estimated intermediate sizes, choosing which side of every join is
+  built versus probed by estimated output size.
+
+The optimizer emits plans in the *same* nested-tuple language as
+``plan_query`` — backends, the plan walker, ``plan_shape`` and the
+serving layer are untouched; ``plan_query`` remains the stats-free
+fallback (the numpy oracle keeps using it, so differential tests stay
+independent of this module).  Cardinality estimates are exact for
+LOOKUP leaves and conservative upper bounds for conjunctions; joins use
+the classic uniform-endpoint estimate |A|·|B| / |V|.  A misestimate can
+never change answers — only capacities — because every plan still runs
+under the sticky-overflow double-and-retry ladder (see
+``core.backend``).
+
+Host-side only: no jax import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .query import (
+    CPQ,
+    Conj,
+    Edge,
+    Identity,
+    Join,
+    _flatten_join,
+    _split_seq,
+    _strip_identity_joins,
+    freeze_plan,
+)
+from .stats import IndexStats
+
+#: Split-enumeration budget per label run; runs with more valid
+#: compositions fall back to the greedy split (correctness unaffected).
+MAX_SPLIT_ENUM = 256
+
+
+# ---------------------------------------------------------------------- #
+# cost model
+# ---------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEstimate:
+    """Estimated execution profile of one physical plan (or sub-plan).
+
+    ``classes``  — class-list length if the result can stay in class
+                   space (None once pairs materialize);
+    ``pairs``    — cardinality of the result once materialized;
+    ``cost``     — total rows touched (the optimizer's objective);
+    ``max_pairs``— largest pair-space relation materialized anywhere
+                   (drives ``QueryCaps.pair_cap``);
+    ``max_join`` — largest pre-dedup expansion-join output (drives
+                   ``QueryCaps.join_cap``).
+    """
+
+    classes: float | None
+    pairs: float
+    cost: float
+    max_pairs: float
+    max_join: float
+
+
+def join_card(a: float, b: float, n_vertices: int) -> float:
+    """Uniform-endpoint composition estimate: |A ∘ B| ≈ |A|·|B| / |V|,
+    clamped to [1, |A|·|B|]; exactly 0 when either side is empty."""
+    if a <= 0 or b <= 0:
+        return 0.0
+    return min(a * b, max(1.0, a * b / max(1, n_vertices)))
+
+
+def _est(node, stats: IndexStats) -> PlanEstimate:
+    kind = node[0]
+    if kind == "lookup":
+        segs = node[1]
+        first = tuple(segs[0])
+        cls = float(stats.seq_classes(first))
+        cur = float(stats.seq_pairs(first))
+        if len(segs) == 1:
+            return PlanEstimate(cls, cur, cls, 0.0, 0.0)
+        # multi-segment chain: every segment materializes, then folds
+        # left-to-right through expansion joins (the walker's semantics)
+        cost, maxp, maxj = cur, cur, 0.0
+        for seg in segs[1:]:
+            p = float(stats.seq_pairs(tuple(seg)))
+            out = join_card(cur, p, stats.n_vertices)
+            cost += p + out
+            maxp = max(maxp, p, out)
+            maxj = max(maxj, out)
+            cur = out
+        return PlanEstimate(None, cur, cost, maxp, maxj)
+    if kind == "identity":
+        v = float(stats.n_vertices)
+        return PlanEstimate(None, v, v, v, 0.0)
+    if kind == "conj_id":
+        e = _est(node[1], stats)
+        if e.classes is not None:
+            inner = node[1]
+            if inner[0] == "lookup" and len(inner[1]) == 1:
+                pairs = float(stats.seq_cyclic_pairs(tuple(inner[1][0])))
+            else:
+                pairs = min(e.pairs, float(stats.n_vertices))
+            return PlanEstimate(e.classes, pairs, e.cost + e.classes,
+                                e.max_pairs, e.max_join)
+        pairs = min(e.pairs, float(stats.n_vertices))
+        return PlanEstimate(None, pairs, e.cost + e.pairs,
+                            max(e.max_pairs, e.pairs), e.max_join)
+    if kind == "conj":
+        el, er = _est(node[1], stats), _est(node[2], stats)
+        maxj = max(el.max_join, er.max_join)
+        if el.classes is not None and er.classes is not None:
+            # Prop. 4.1: class-id intersection; |result ∩| pairs is
+            # bounded by either side's total (a sound upper bound)
+            cls = min(el.classes, er.classes)
+            return PlanEstimate(cls, min(el.pairs, er.pairs),
+                                el.cost + er.cost + cls,
+                                max(el.max_pairs, er.max_pairs), maxj)
+        lp, rp = el.pairs, er.pairs  # both sides materialize
+        return PlanEstimate(None, min(lp, rp),
+                            el.cost + er.cost + lp + rp,
+                            max(el.max_pairs, er.max_pairs, lp, rp), maxj)
+    if kind == "join":
+        el, er = _est(node[1], stats), _est(node[2], stats)
+        lp, rp = el.pairs, er.pairs
+        out = join_card(lp, rp, stats.n_vertices)
+        return PlanEstimate(None, out, el.cost + er.cost + lp + rp + out,
+                            max(el.max_pairs, er.max_pairs, lp, rp, out),
+                            max(el.max_join, er.max_join, out))
+    raise ValueError(kind)
+
+
+def estimate_plan(plan, stats: IndexStats) -> PlanEstimate:
+    """Estimate a whole plan *including* the final materialization (a
+    class-space result is expanded to pairs at the very end — the
+    epilogue of the plan walker)."""
+    e = _est(plan, stats)
+    if e.classes is None:
+        return e
+    return PlanEstimate(e.classes, e.pairs, e.cost + e.pairs,
+                        max(e.max_pairs, e.pairs), e.max_join)
+
+
+# ---------------------------------------------------------------------- #
+# plan enumeration
+# ---------------------------------------------------------------------- #
+
+
+def enumerate_splits(seq: tuple, k: int, available,
+                     limit: int = MAX_SPLIT_ENUM) -> list | None:
+    """All segmentations of ``seq`` into contiguous parts of length <= k,
+    each part present in ``available`` (length-1 parts are always legal:
+    L_q ⊇ L).  Returns None when the count would exceed ``limit`` (the
+    caller falls back to the greedy split)."""
+    out: list = []
+
+    def rec(i: int, acc: list) -> bool:
+        if i == len(seq):
+            out.append(list(acc))
+            return len(out) <= limit
+        for step in range(1, min(k, len(seq) - i) + 1):
+            part = tuple(seq[i: i + step])
+            if step > 1 and available is not None and part not in available:
+                continue
+            acc.append(part)
+            ok = rec(i + step, acc)
+            acc.pop()
+            if not ok:
+                return False
+        return True
+
+    return out if rec(0, []) else None
+
+
+def _best_split(labels: tuple, k: int, stats: IndexStats, available) -> list:
+    """Cheapest valid segmentation of one label run.
+
+    A run that fits one indexed segment is provably optimal — its
+    materialization is exactly the answer, and every split must
+    materialize that same answer *plus* its own leaves — so it
+    short-circuits (this is also the paper's Sec. VI-D observation that
+    a diameter-k chain on a k-index is a single lookup)."""
+    labels = tuple(labels)
+    if len(labels) <= k and (available is None or labels in available
+                             or len(labels) == 1):
+        return [labels]
+    cands = enumerate_splits(labels, k, available)
+    if not cands:
+        return _split_seq(labels, k, available)
+    best, best_key = None, None
+    for segs in cands:
+        items = [("lookup", [s]) for s in segs]
+        _, cost = _chain_dp(items, stats)
+        key = (cost, len(segs), tuple(segs))
+        if best_key is None or key < best_key:
+            best, best_key = segs, key
+    return best
+
+
+def _chain_dp(items: list, stats: IndexStats):
+    """Re-associate a join chain (order fixed, grouping free) by interval
+    DP over estimated intermediate cardinalities.  Interval cardinality
+    is computed once per interval (left-extension), so every grouping of
+    the same interval shares one estimate and the DP is consistent.
+    Returns (plan tree, estimated cost)."""
+    n = len(items)
+    ests = [estimate_plan(it, stats) for it in items]
+    if n == 1:
+        return items[0], ests[0].cost
+    card = [[0.0] * n for _ in range(n)]
+    cost = [[0.0] * n for _ in range(n)]
+    cut = [[0] * n for _ in range(n)]
+    for i in range(n):
+        card[i][i] = ests[i].pairs
+        cost[i][i] = ests[i].cost
+    for span in range(2, n + 1):
+        for i in range(0, n - span + 1):
+            j = i + span - 1
+            card[i][j] = join_card(card[i][j - 1], card[j][j],
+                                   stats.n_vertices)
+            best, best_m = None, i
+            for m in range(i, j):
+                c = (cost[i][m] + cost[m + 1][j]
+                     + card[i][m] + card[m + 1][j] + card[i][j])
+                if best is None or c < best:
+                    best, best_m = c, m
+            cost[i][j], cut[i][j] = best, best_m
+
+    def build(i: int, j: int):
+        if i == j:
+            return items[i]
+        m = cut[i][j]
+        return ("join", build(i, m), build(m + 1, j))
+
+    return build(0, n - 1), cost[0][n - 1]
+
+
+def _fuse_lookups(node):
+    """Fold ``join(lookup[segs...], lookup[single])`` into one multi-
+    segment LOOKUP node — the walker evaluates a LOOKUP's segments as
+    exactly that left-deep join chain, so the fusion never changes the
+    association the DP chose; it only shares the jit shape with the
+    syntactic planner's output."""
+    kind = node[0]
+    if kind == "join":
+        l = _fuse_lookups(node[1])
+        r = _fuse_lookups(node[2])
+        if l[0] == "lookup" and r[0] == "lookup" and len(r[1]) == 1:
+            return ("lookup", list(l[1]) + list(r[1]))
+        return ("join", l, r)
+    if kind == "conj":
+        return ("conj", _fuse_lookups(node[1]), _fuse_lookups(node[2]))
+    if kind == "conj_id":
+        return ("conj_id", _fuse_lookups(node[1]))
+    return node
+
+
+def _flatten_conj(q: CPQ) -> list:
+    if isinstance(q, Conj):
+        return _flatten_conj(q.lhs) + _flatten_conj(q.rhs)
+    return [q]
+
+
+def _opt(q: CPQ, k: int, stats: IndexStats, available):
+    if isinstance(q, Edge):
+        return ("lookup", [(q.label,)])
+    if isinstance(q, Identity):
+        return ("identity",)
+    if isinstance(q, Conj):
+        ops = _flatten_conj(q)
+        rest = [o for o in ops if not isinstance(o, Identity)]
+        if not rest:
+            return ("identity",)  # id ∩ id ∩ ... == id
+        plans = [_opt(o, k, stats, available) for o in rest]
+        # ∩ is idempotent: identical operands (e.g. the shared edge of
+        # the TT template) evaluate once
+        deduped = {freeze_plan(p): p for p in plans}
+        # commutative: smallest estimated operand first, so the running
+        # intersection (the probed side) stays as small as possible
+        keyed = []
+        for frozen, p in deduped.items():
+            e = estimate_plan(p, stats)
+            keyed.append(((e.pairs, e.classes is None, repr(frozen)), p))
+        keyed.sort(key=lambda kp: kp[0])
+        plans = [p for _, p in keyed]
+        node = plans[0]
+        for nxt in plans[1:]:
+            node = ("conj", node, nxt)
+        if len(rest) < len(ops):  # had an identity operand: q ∩ id
+            node = ("conj_id", node)
+        return node
+    if isinstance(q, Join):
+        leaves = _flatten_join(q)
+        items: list = []
+        run: list = []
+        for leaf in leaves + [None]:  # None flushes the trailing run
+            if isinstance(leaf, Edge):
+                run.append(leaf.label)
+                continue
+            if run:
+                items.extend(("lookup", [s]) for s in
+                             _best_split(tuple(run), k, stats, available))
+                run = []
+            if leaf is not None:
+                items.append(_opt(leaf, k, stats, available))
+        if len(items) == 1:
+            return items[0]
+        tree, _ = _chain_dp(items, stats)
+        return _fuse_lookups(tree)
+    raise TypeError(q)
+
+
+def optimize_query(q: CPQ, k: int, stats: IndexStats, available=None):
+    """Compile an AST to a cost-optimized physical plan.
+
+    Same contract as :func:`repro.core.query.plan_query` (the syntactic
+    fallback), same plan language, same answers — only operator order,
+    join association, and segment splits differ, chosen to minimize the
+    cost model over ``stats``.  ``available`` restricts LOOKUP segments
+    exactly as in the syntactic planner (iaCPQx query-time splitting)."""
+    q = _strip_identity_joins(q)
+    if isinstance(q, Identity):
+        return ("identity",)
+    return _opt(q, k, stats, available)

@@ -12,9 +12,14 @@ decoding; this module adapts it to CPQ serving on top of
   :func:`repro.core.query.plan_shape` (the jit key); every bucket is one
   device dispatch regardless of how many queries (or which labels) it
   holds.
-* **bounded plan cache** — AST -> physical plan memoization (planning is
-  host work but repeated verbatim for recurring traffic); LRU beyond
-  ``plan_cache_size``.
+* **bounded plan cache keyed by (graph epoch, query)** — AST -> physical
+  plan memoization (planning is host work but repeated verbatim for
+  recurring traffic); LRU beyond ``plan_cache_size``.  The epoch
+  component matters since PR 4: plans come from the cost-based optimizer
+  (``core.optimizer``), so they depend on the index *statistics*, not
+  just the available sequences — any rebind bumps the epoch and every
+  plan optimized against stale statistics becomes unreachable in O(1),
+  exactly like stale results.
 * **LRU result cache keyed by (graph epoch, query)** — repeat queries
   are answered host-side with zero device work.  The epoch component
   makes invalidation O(1): any graph mutation bumps the epoch and every
@@ -96,7 +101,7 @@ class QueryService:
 
     def __init__(self, engine: Engine, *, max_batch: int = 64,
                  result_cache_size: int = 1024, plan_cache_size: int = 256,
-                 caps: QueryCaps | None = None, max_retries: int = 8,
+                 caps: QueryCaps | None = None, max_retries: int = 10,
                  maintainer=None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -112,7 +117,7 @@ class QueryService:
         self._pending_updates: list = []
         self._results: OrderedDict = OrderedDict()  # (epoch, query) -> rows
         self._result_cache_size = result_cache_size
-        self._plans: OrderedDict = OrderedDict()  # query -> physical plan
+        self._plans: OrderedDict = OrderedDict()  # (epoch, query) -> plan
         self._plan_cache_size = plan_cache_size
 
     # ------------------------------------------------------------------ #
@@ -250,16 +255,17 @@ class QueryService:
     def rebind(self, index: CPQxIndex) -> None:
         """Swap in a rebuilt index (after ``core.maintenance`` mirror
         surgery or a from-scratch rebuild).  Bumps the graph epoch so
-        every cached result keyed to the old epoch is dead, and drops the
-        plan cache (iaCPQx plans depend on available sequences)."""
+        every cached result — and every cached plan, which since PR 4 is
+        optimized against the old index's statistics — is dead."""
         if self._queue:
             self.flush()  # drain against the index the requests targeted
         self.engine.rebind(index)
         self.bump_epoch()
 
     def bump_epoch(self) -> None:
+        """O(1) invalidation: results *and* plans are keyed by epoch, so
+        stale entries become unreachable and age out of their LRUs."""
         self.graph_epoch += 1
-        self._plans.clear()
 
     # ------------------------------------------------------------------ #
     # caches
@@ -283,12 +289,13 @@ class QueryService:
             self._results.popitem(last=False)
 
     def _plan(self, query: CPQ):
-        if query in self._plans:
-            self._plans.move_to_end(query)
+        key = (self.graph_epoch, query)
+        if key in self._plans:
+            self._plans.move_to_end(key)
             self.stats.plan_hits += 1
-            return self._plans[query]
+            return self._plans[key]
         plan = self.engine.plan(query)
-        self._plans[query] = plan
+        self._plans[key] = plan
         while len(self._plans) > self._plan_cache_size:
             self._plans.popitem(last=False)
         return plan

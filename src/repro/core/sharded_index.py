@@ -22,7 +22,16 @@ stays tiny even when the pair space grows with the graph):
 single-device :class:`~repro.core.index.DeviceIndexArrays`; the shard
 capacities derive from the device capacities (stable across maintenance
 flushes, so ``Engine.rebind`` after a flush reshards into arrays of the
-same shape and keeps the jit cache warm) and grow-and-retry on skew.
+same shape and keeps the jit cache warm) and grow-and-retry on skew
+(the host twin of the device overflow ladder specified in the
+``core.backend`` module docstring).
+
+Because the planning metadata is replicated, the cost-based optimizer's
+statistics are too: :func:`replicated_stats` rebuilds the exact
+:class:`~repro.core.stats.IndexStats` of the pre-shard index from a
+sharded layout alone, so a planner next to any shard reorders plans
+identically to a local engine — sharded planning can never drift from
+local planning.
 """
 
 from __future__ import annotations
@@ -203,6 +212,35 @@ def shard_index(index: CPQxIndex, n_shards: int,
         seq_table=a.seq_table, seq_count=a.seq_count,
         seq_starts=a.seq_starts, seq_ends=a.seq_ends,
         l2c_cls=a.l2c_cls, l2c_count=a.l2c_count,
+    )
+
+
+def replicated_stats(sharded: ShardedIndexArrays, n_vertices: int,
+                     k: int) -> "IndexStats":
+    """The optimizer's :class:`~repro.core.stats.IndexStats`, derived
+    entirely from a sharded layout: the seq/l2c/cyclic metadata is
+    replicated, and per-class pair counts fall out of the per-shard CSRs
+    — every class lives whole on exactly one shard, so summing the
+    per-shard extents over the shard axis reconstructs the global class
+    sizes exactly.  Bit-identical to ``IndexStats.from_index`` on the
+    index that was sharded (tests pin this) — so a planner holding only
+    the sharded layout (a migration target, a remote planner) reorders
+    plans exactly as a local engine would."""
+    from .index import _pull_seq_ranges  # sharded tuple has the seq fields
+    from .stats import IndexStats
+
+    starts = np.asarray(sharded.class_starts, np.int64)
+    sizes = (starts[:, 1:] - starts[:, :-1]).sum(axis=0)
+    return IndexStats.from_host_arrays(
+        n_vertices=n_vertices,
+        n_classes=int(sharded.n_classes),
+        total_pairs=int(np.asarray(sharded.c2p_counts).sum()),
+        seq_ranges=_pull_seq_ranges(sharded, k),
+        class_starts=np.concatenate([np.zeros(1, np.int64),
+                                     np.cumsum(sizes)]),
+        l2c_cls=np.asarray(sharded.l2c_cls),
+        l2c_count=int(sharded.l2c_count),
+        class_cyclic=np.asarray(sharded.class_cyclic),
     )
 
 

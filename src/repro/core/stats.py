@@ -1,0 +1,155 @@
+"""Host-side statistics view over a built CPQx/iaCPQx index.
+
+The index already *is* a statistics store: the ``I_l2c`` row range of a
+label sequence gives its exact class count, and the ``I_c2p`` CSR
+offsets give the exact pair count of every class.  This module pulls
+those few-KB arrays to the host ONCE per bind/rebind and turns them into
+O(1) per-sequence cardinality queries via two prefix sums over the l2c
+rows — the raw material of the cost-based optimizer
+(:mod:`repro.core.optimizer`) and of the engine's capacity estimator.
+
+Three constructors cover every index form in the repo:
+
+* :meth:`IndexStats.from_index` — a device :class:`~repro.core.index.CPQxIndex`
+  (one device sync; called by ``Engine.rebind``, so maintenance flushes
+  refresh the statistics automatically);
+* :meth:`IndexStats.from_host_arrays` — raw numpy arrays; used by
+  :func:`repro.core.sharded_index.replicated_stats` to derive the same
+  view from a sharded layout's replicated leaves (sharded planning must
+  match local planning bit-for-bit);
+* :meth:`IndexStats.from_oracle` — the dict-form ``oracle.Index`` mirror,
+  keeping the optimizer testable without jax.
+
+This module is host-only: numpy, no jax import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class IndexStats:
+    """Exact per-sequence cardinalities of one index snapshot.
+
+    ``seq_ranges`` maps a label-sequence tuple to its (lo, hi) row range
+    in the l2c class column; the three cumulative arrays turn any range
+    into class / pair / cyclic-pair counts in O(1).
+    """
+
+    n_vertices: int
+    n_classes: int
+    total_pairs: int
+    seq_ranges: dict
+    class_sizes: np.ndarray  # (>= n_classes,) pairs per class id
+    l2c_cls: np.ndarray  # (l2c_count,) valid l2c class-column rows
+    _pairs_cum: np.ndarray  # (l2c_count + 1,) prefix sum of row class sizes
+    _cyc_cum: np.ndarray  # (l2c_count + 1,) same, cyclic classes only
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def from_host_arrays(
+        cls,
+        *,
+        n_vertices: int,
+        n_classes: int,
+        total_pairs: int,
+        seq_ranges: dict,
+        class_starts: np.ndarray,
+        l2c_cls: np.ndarray,
+        l2c_count: int,
+        class_cyclic: np.ndarray,
+    ) -> "IndexStats":
+        starts = np.asarray(class_starts, np.int64)
+        sizes = starts[1:] - starts[:-1]
+        cyc = np.asarray(class_cyclic, np.int64)
+        rows = np.asarray(l2c_cls, np.int64)[: int(l2c_count)]
+        safe = np.clip(rows, 0, sizes.shape[0] - 1)
+        row_sizes = np.where(rows < sizes.shape[0], sizes[safe], 0)
+        row_cyc = row_sizes * np.where(rows < cyc.shape[0], cyc[safe], 0)
+        zero = np.zeros(1, np.int64)
+        return cls(
+            n_vertices=int(n_vertices),
+            n_classes=int(n_classes),
+            total_pairs=int(total_pairs),
+            seq_ranges=dict(seq_ranges),
+            class_sizes=sizes,
+            l2c_cls=rows,
+            _pairs_cum=np.concatenate([zero, np.cumsum(row_sizes)]),
+            _cyc_cum=np.concatenate([zero, np.cumsum(row_cyc)]),
+        )
+
+    @classmethod
+    def from_index(cls, index) -> "IndexStats":
+        """Pull the statistics mirrors off a :class:`~repro.core.index.
+        CPQxIndex` (a few KB; the one device sync of a rebind)."""
+        a = index.arrays
+        return cls.from_host_arrays(
+            n_vertices=index.n_vertices,
+            n_classes=int(a.n_classes),
+            total_pairs=int(a.pair_count),
+            seq_ranges=index.seq_ranges,
+            class_starts=np.asarray(a.class_starts),
+            l2c_cls=np.asarray(a.l2c_cls),
+            l2c_count=int(a.l2c_count),
+            class_cyclic=np.asarray(a.class_cyclic),
+        )
+
+    @classmethod
+    def from_oracle(cls, oindex, n_vertices: int) -> "IndexStats":
+        """Build the same view from the dict-form ``oracle.Index`` (or a
+        :class:`~repro.core.maintenance.MaintainableIndex` mirror).  Class
+        ids are densified in ascending order, exactly like
+        ``index.from_host_mirror``, so the derived statistics match a
+        flush of the same mirror."""
+        ids = sorted(c for c, ps in oindex.c2p.items() if ps)
+        remap = {c: i for i, c in enumerate(ids)}
+        sizes = np.array([len(oindex.c2p[c]) for c in ids] or [0], np.int64)
+        cyclic = np.array(
+            [1 if oindex.cyclic[c] else 0 for c in ids] or [0], np.int64)
+        seq_ranges: dict = {}
+        flat: list[int] = []
+        for s in sorted(tuple(t) for t in oindex.l2c):
+            lo = len(flat)
+            flat.extend(sorted(remap[c] for c in oindex.l2c[s] if c in remap))
+            seq_ranges[s] = (lo, len(flat))
+        return cls.from_host_arrays(
+            n_vertices=n_vertices,
+            n_classes=len(ids),
+            total_pairs=int(sizes.sum()) if ids else 0,
+            seq_ranges=seq_ranges,
+            class_starts=np.concatenate([np.zeros(1, np.int64),
+                                         np.cumsum(sizes)]),
+            l2c_cls=np.asarray(flat, np.int64),
+            l2c_count=len(flat),
+            class_cyclic=cyclic,
+        )
+
+    # ------------------------------------------------------------------ #
+    # O(1) per-sequence cardinalities (all exact)
+    # ------------------------------------------------------------------ #
+
+    def has_seq(self, seq) -> bool:
+        return tuple(seq) in self.seq_ranges
+
+    def seq_classes(self, seq) -> int:
+        """Number of classes in the sequence's l2c list (LOOKUP output)."""
+        lo, hi = self.seq_ranges.get(tuple(seq), (0, 0))
+        return hi - lo
+
+    def seq_pairs(self, seq) -> int:
+        """Total s-t pairs across the sequence's classes — the exact size
+        of materializing this LOOKUP."""
+        lo, hi = self.seq_ranges.get(tuple(seq), (0, 0))
+        return int(self._pairs_cum[hi] - self._pairs_cum[lo])
+
+    def seq_cyclic_pairs(self, seq) -> int:
+        """Pairs in cycle-pure classes only — the exact size of
+        ``lookup(seq) ∩ id`` (classes are cycle-pure by construction)."""
+        lo, hi = self.seq_ranges.get(tuple(seq), (0, 0))
+        return int(self._cyc_cum[hi] - self._cyc_cum[lo])

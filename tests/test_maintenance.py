@@ -78,6 +78,17 @@ class TestEdgeUpdates:
 
 
 class TestInterestUpdates:
+    def test_interest_ops_require_interest_aware_index(self):
+        """API precondition, not an internal invariant: a full-CPQx
+        mirror rejects interest updates with ValueError (survives
+        ``python -O``, unlike the old bare assert)."""
+        g = random_graph(10, n_max=16, m_max=40)
+        mi = MaintainableIndex.build(g, 2)  # no interests
+        with pytest.raises(ValueError, match="interest-aware"):
+            mi.delete_interest((0, 1))
+        with pytest.raises(ValueError, match="interest-aware"):
+            mi.insert_interest((0, 1))
+
     def test_interest_delete_insert(self):
         g = random_graph(10, n_max=16, m_max=40)
         mi = MaintainableIndex.build(g, 2, interests=[(0, 1), (1, 1)])

@@ -1,0 +1,315 @@
+"""Cost-based optimizer (PR 4): the statistics view agrees across every
+index form (device, oracle mirror, sharded layout), the cost model's
+exact/bounded estimates hold, golden plan snapshots on the skewed
+fixture pin syntactic-vs-optimized behavior, and optimized plans are
+always oracle-identical (hypothesis property + device differential)."""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import oracle
+from repro.core.optimizer import (
+    enumerate_splits,
+    estimate_plan,
+    join_card,
+    optimize_query,
+)
+from repro.core.query import (
+    TEMPLATE_ARITY,
+    TEMPLATES,
+    instantiate_template,
+    parse,
+    plan_lookup_seqs,
+    plan_query,
+)
+from repro.core.stats import IndexStats
+from repro.data.graphs import skewed_labeled_graph
+
+
+def eval_plan_host(g, oidx, plan):
+    """Evaluate any physical plan against the dict-form oracle index
+    (the host twin of the device walker)."""
+    pairs, classes = oracle._eval_plan(g, oidx, plan)
+    if classes is not None:
+        pairs = oracle._materialize(oidx, classes)
+    return pairs
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    """Small deterministic skewed-hub fixture: graph + oracle index +
+    stats (host-only — the optimizer needs no device)."""
+    g = skewed_labeled_graph(n_vertices=40, wave=12, rare_edges=10, seed=7)
+    oidx = oracle.build_index(g, 2)
+    return g, oidx, IndexStats.from_oracle(oidx, g.n_vertices)
+
+
+# ---------------------------------------------------------------------- #
+# the statistics view
+# ---------------------------------------------------------------------- #
+
+
+class TestIndexStats:
+    def test_seq_stats_are_exact(self, skewed):
+        """seq_pairs / seq_classes / seq_cyclic_pairs recompute exactly
+        from the oracle dicts for every indexed sequence."""
+        _, oidx, stats = skewed
+        assert stats.seq_ranges  # non-degenerate fixture
+        for s, classes in oidx.l2c.items():
+            assert stats.seq_classes(s) == len(classes)
+            assert stats.seq_pairs(s) == sum(
+                len(oidx.c2p[c]) for c in classes)
+            assert stats.seq_cyclic_pairs(s) == sum(
+                len(oidx.c2p[c]) for c in classes if oidx.cyclic[c])
+
+    def test_missing_seq_is_zero(self, skewed):
+        _, _, stats = skewed
+        assert not stats.has_seq((5, 5))
+        assert stats.seq_classes((5, 5)) == 0
+        assert stats.seq_pairs((5, 5)) == 0
+
+    def test_oracle_and_device_views_agree(self):
+        """IndexStats.from_index (device arrays) == from_oracle (dict
+        mirror) on every invariant the optimizer consumes."""
+        from repro.core import index as cindex
+
+        g = random_graph(31, n_max=14, m_max=40)
+        dev = IndexStats.from_index(cindex.build(g, 2))
+        host = IndexStats.from_oracle(oracle.build_index(g, 2),
+                                      g.n_vertices)
+        assert set(dev.seq_ranges) == set(host.seq_ranges)
+        assert (dev.n_classes, dev.total_pairs) == (host.n_classes,
+                                                    host.total_pairs)
+        for s in dev.seq_ranges:
+            assert dev.seq_classes(s) == host.seq_classes(s), s
+            assert dev.seq_pairs(s) == host.seq_pairs(s), s
+            assert dev.seq_cyclic_pairs(s) == host.seq_cyclic_pairs(s), s
+
+    def test_sharded_stats_match_local(self):
+        """replicated_stats rebuilds the local statistics from a sharded
+        layout's replicated leaves alone — sharded planning can never
+        drift from local planning."""
+        from repro.core import index as cindex
+        from repro.core.sharded_index import replicated_stats, shard_index
+
+        g = random_graph(32, n_max=16, m_max=45)
+        idx = cindex.build(g, 2)
+        local = IndexStats.from_index(idx)
+        rep = replicated_stats(shard_index(idx, 4), idx.n_vertices, idx.k)
+        assert rep.seq_ranges == local.seq_ranges
+        assert (rep.n_classes, rep.total_pairs) == (local.n_classes,
+                                                    local.total_pairs)
+        for s in local.seq_ranges:
+            assert rep.seq_pairs(s) == local.seq_pairs(s), s
+            assert rep.seq_classes(s) == local.seq_classes(s), s
+            assert rep.seq_cyclic_pairs(s) == local.seq_cyclic_pairs(s), s
+
+
+# ---------------------------------------------------------------------- #
+# cost model
+# ---------------------------------------------------------------------- #
+
+
+class TestCostModel:
+    def test_join_card(self):
+        assert join_card(0, 5, 10) == 0
+        assert join_card(5, 0, 10) == 0
+        assert join_card(10, 20, 100) == 2  # uniform estimate
+        assert join_card(10, 20, 10_000) == 1  # floored at one row
+        assert join_card(2, 3, 1) == 6  # never exceeds the cross product
+
+    def test_lookup_estimates_are_exact(self, skewed):
+        _, oidx, stats = skewed
+        for s in oidx.l2c:
+            e = estimate_plan(("lookup", [tuple(s)]), stats)
+            assert e.pairs == stats.seq_pairs(s)
+            assert e.classes == stats.seq_classes(s)
+            assert e.max_pairs == e.pairs  # final materialization only
+
+    def test_class_conjunction_min_bound(self, skewed):
+        """A class-space conjunction's materialization is bounded by its
+        smallest operand — exactly what lets the engine cap a selective
+        conjunction near its answer instead of near its largest lookup."""
+        _, _, stats = skewed
+        plan = ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)]))
+        e = estimate_plan(plan, stats)
+        small = min(stats.seq_pairs((0, 0)), stats.seq_pairs((1,)))
+        assert e.pairs == small
+        assert e.max_pairs == small  # leaves never materialize
+        assert e.max_join == 0
+
+    def test_conj_id_single_lookup_is_exact(self, skewed):
+        _, oidx, stats = skewed
+        seq = (1, 0)  # the fixture's cyclic-rich sequence
+        assert stats.seq_cyclic_pairs(seq) > 0
+        e = estimate_plan(("conj_id", ("lookup", [seq])), stats)
+        assert e.pairs == stats.seq_cyclic_pairs(seq)
+
+    def test_identity_floor(self, skewed):
+        g, _, stats = skewed
+        e = estimate_plan(("identity",), stats)
+        assert e.pairs == e.max_pairs == g.n_vertices
+
+    def test_join_tracks_intermediates(self, skewed):
+        _, _, stats = skewed
+        plan = ("join", ("lookup", [(1,)]), ("lookup", [(0, 0)]))
+        e = estimate_plan(plan, stats)
+        assert e.max_pairs >= stats.seq_pairs((0, 0))  # leaf materializes
+        assert e.max_join == e.pairs > 0
+
+
+# ---------------------------------------------------------------------- #
+# split enumeration
+# ---------------------------------------------------------------------- #
+
+
+class TestSplits:
+    def test_enumerates_all_compositions(self):
+        segs = enumerate_splits((1, 2, 3), 2, None)
+        assert sorted(segs) == sorted([
+            [(1,), (2,), (3,)], [(1, 2), (3,)], [(1,), (2, 3)]])
+
+    def test_respects_available(self):
+        segs = enumerate_splits((1, 2, 3), 2, {(1, 2)})
+        assert sorted(segs) == sorted([[(1,), (2,), (3,)], [(1, 2), (3,)]])
+
+    def test_limit_returns_none(self):
+        assert enumerate_splits(tuple(range(24)), 3, None, limit=10) is None
+
+    def test_full_run_single_segment_wins(self, skewed):
+        """Sec. VI-D: a diameter-k chain on a k-index is ONE lookup even
+        when a split would have smaller leaves — the single segment's
+        materialization is exactly the answer."""
+        _, _, stats = skewed
+        q = parse("l0 . l2", None, 6)
+        assert optimize_query(q, 2, stats) == ("lookup", [(0, 2)])
+
+
+# ---------------------------------------------------------------------- #
+# golden plan snapshots (skewed fixture, deterministic seed)
+# ---------------------------------------------------------------------- #
+
+
+class TestGoldenPlans:
+    """Syntactic vs optimized plans for the representative Fig. 5
+    templates on the skewed fixture — pinned literally, so any cost
+    model or enumeration change that flips a decision is visible."""
+
+    CASES = [
+        # (template, labels, syntactic plan, optimized plan)
+        ("T", [0, 0, 1],
+         ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)])),
+         ("conj", ("lookup", [(1,)]), ("lookup", [(0, 0)]))),
+        ("S", [0, 0, 2, 3],
+         ("conj", ("lookup", [(0, 0)]), ("lookup", [(2, 3)])),
+         ("conj", ("lookup", [(2, 3)]), ("lookup", [(0, 0)]))),
+        ("St", [0, 4, 5],
+         ("conj", ("conj", ("lookup", [(0,)]), ("lookup", [(4,)])),
+          ("lookup", [(5,)])),
+         ("conj", ("conj", ("lookup", [(4,)]), ("lookup", [(5,)])),
+          ("lookup", [(0,)]))),
+        # ∩ is idempotent: TT's duplicated triangle evaluates once
+        ("TT", [0, 0, 0, 0, 1],
+         ("conj", ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)])),
+          ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)]))),
+         ("conj", ("lookup", [(1,)]), ("lookup", [(0, 0)]))),
+        # chain: greedy (1,0)+(2,3) loses to the rare-leaf split
+        ("C4", [1, 0, 2, 3],
+         ("lookup", [(1, 0), (2, 3)]),
+         ("join", ("lookup", [(1,)]), ("lookup", [(0, 2), (3,)]))),
+        ("C2i", [0, 1],
+         ("conj_id", ("lookup", [(0, 1)])),
+         ("conj_id", ("lookup", [(0, 1)]))),
+    ]
+
+    @pytest.mark.parametrize("case", CASES, ids=[c[0] for c in CASES])
+    def test_golden(self, skewed, case):
+        g, oidx, stats = skewed
+        name, labels, want_syn, want_opt = case
+        q = instantiate_template(name, labels)
+        assert plan_query(q, 2) == want_syn
+        assert optimize_query(q, 2, stats) == want_opt
+        # snapshots must describe plans that agree with the semantics
+        truth = oracle.cpq_eval(g, q)
+        assert eval_plan_host(g, oidx, want_syn) == truth
+        assert eval_plan_host(g, oidx, want_opt) == truth
+
+
+# ---------------------------------------------------------------------- #
+# optimized plans are always oracle-identical
+# ---------------------------------------------------------------------- #
+
+
+class TestOracleIdentical:
+    def test_templates_host(self, skewed):
+        g, oidx, stats = skewed
+        rng = np.random.default_rng(4)
+        present = np.unique(g.lbl)
+        for name in sorted(TEMPLATES):
+            q = instantiate_template(
+                name, rng.choice(present, TEMPLATE_ARITY[name]).tolist())
+            plan = optimize_query(q, 2, stats)
+            assert eval_plan_host(g, oidx, plan) == oracle.cpq_eval(g, q), \
+                (name, plan)
+
+    def test_interest_aware_respects_available(self):
+        """On an iaCPQx index every optimized LOOKUP segment must exist
+        in the available set (or be a singleton), and answers match."""
+        g = random_graph(33, n_max=14, m_max=40)
+        ints = [(0, 1), (1, 0), (2, 2)]
+        oidx = oracle.build_interest_index(g, 2, ints)
+        stats = IndexStats.from_oracle(oidx, g.n_vertices)
+        available = set(oidx.l2c)
+        rng = np.random.default_rng(9)
+        for _ in range(15):
+            q = oracle.random_cpq(rng, g, 3)
+            plan = optimize_query(q, 2, stats, available=available)
+            for seg in plan_lookup_seqs(plan):
+                assert len(seg) == 1 or tuple(seg) in available, (q, plan)
+            assert eval_plan_host(g, oidx, plan) == \
+                oracle.query_with_index(g, oidx, q) == oracle.cpq_eval(g, q)
+
+    def test_property_random_graphs(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        given, settings, st = (hypothesis.given, hypothesis.settings,
+                               hypothesis.strategies)
+
+        @settings(max_examples=30, deadline=None)
+        @given(seed=st.integers(0, 10_000))
+        def run(seed):
+            g = random_graph(seed % 97, n_max=12, m_max=30)
+            oidx = oracle.build_index(g, 2)
+            stats = IndexStats.from_oracle(oidx, g.n_vertices)
+            rng = np.random.default_rng(seed)
+            for _ in range(3):
+                q = oracle.random_cpq(rng, g, 3)
+                truth = oracle.cpq_eval(g, q)
+                p_opt = optimize_query(q, 2, stats)
+                assert eval_plan_host(g, oidx, p_opt) == truth, (q, p_opt)
+                assert eval_plan_host(g, oidx, plan_query(q, 2)) == truth
+
+        run()
+
+    def test_device_engine_differential(self, skewed):
+        """The full device path: Engine(optimize=True) == Engine(
+        optimize=False) == oracle, bit-identical rows, on the fixture's
+        gated probes (conjunctions AND the re-split chain)."""
+        from repro.core import index as cindex
+        from repro.core.engine import Engine
+
+        g, _, _ = skewed
+        idx = cindex.build(g, 2)
+        opt, syn = Engine(idx), Engine(idx, optimize=False)
+        for name, labels in [("T", [0, 0, 1]), ("S", [0, 0, 2, 3]),
+                             ("St", [0, 4, 5]), ("TT", [0, 0, 0, 0, 1]),
+                             ("C4", [1, 0, 2, 3]), ("C2i", [0, 1])]:
+            q = instantiate_template(name, labels)
+            a, b = opt.execute(q), syn.execute(q)
+            assert a.shape == b.shape and bool(np.all(a == b)), name
+            assert {tuple(r) for r in a.tolist()} == oracle.cpq_eval(g, q)
+        # batch path groups optimized plans by shape+caps; same rows out
+        qs = [instantiate_template("T", [0, 0, 1]),
+              instantiate_template("S", [0, 0, 2, 3])] * 2
+        for rows, q in zip(opt.execute_batch(qs), qs):
+            assert {tuple(r) for r in rows.tolist()} == oracle.cpq_eval(g, q)

@@ -156,6 +156,20 @@ class TestEpochInvalidation:
         assert not svc.submit(q).from_cache
         svc.flush()
 
+    def test_plan_cache_keyed_on_epoch(self, ex_graph, svc):
+        """Plans are optimized against the index *statistics* (PR 4), so
+        an epoch bump makes cached plans unreachable without a scan —
+        same O(1) invalidation contract as the result cache."""
+        q = instantiate_template("T", [0, 1, 0])
+        svc._plan(q)
+        svc._plan(q)
+        assert svc.stats.plan_hits == 1
+        svc.bump_epoch()
+        svc._plan(q)  # re-planned: the old epoch's entry is stale
+        assert svc.stats.plan_hits == 1
+        svc._plan(q)
+        assert svc.stats.plan_hits == 2
+
     def test_rebind_drains_pending_against_old_index(self, ex_graph):
         """Requests submitted before a rebind were planned against the
         old graph; rebind flushes them first so they complete (and
