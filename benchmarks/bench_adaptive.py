@@ -1,0 +1,159 @@
+"""Adaptive iaCPQx under a drifting workload — the PR 5 adaptation gate.
+
+Three engines serve the same drifting query stream
+(:func:`repro.data.graphs.drifting_workload` over
+:data:`benchmarks.common.ADAPTIVE_PHASES`):
+
+  adaptive  a ``QueryService`` over an interest-aware mirror that starts
+            with NO mined interests and closes the loop itself
+            (``core.workload``: sketch -> benefit -> coalesced interest
+            updates through the write path);
+  static    the same initial index, never adapted — the "interest set is
+            given up front" baseline the paper assumes (Sec. V);
+  full      full CPQx — the latency target the adapted index should
+            converge toward at a fraction of its size.
+
+Per phase the stream is served through the adaptive service (adaptation
+rounds fire automatically from traffic), then a checkpoint times every
+hot template on all three engines and gates on answers:
+``adaptive == static == full == numpy oracle`` — a FAIL exits non-zero.
+In ``--smoke`` (CI) mode each phase must also show >= 2x speedup on at
+least one hot template (adaptive vs static), the drift phase included —
+i.e. the loop must both MINE the new hot sequences and EVICT the stale
+ones under its budget — and the final mined index must stay under half
+of full CPQx's entry count.  Ladder telemetry (retry rungs per engine)
+is emitted alongside wall-clock so estimator/adaptation wins stay
+visible in the perf-trajectory JSON.
+
+    PYTHONPATH=src python -m benchmarks.bench_adaptive [--smoke] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import instantiate_template
+from repro.core.service import QueryService
+from repro.core.workload import AdaptationConfig, AdaptationController
+from repro.data.graphs import drifting_workload
+
+from .common import ADAPTIVE_PHASES, DATASETS, emit, timeit
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in arr.tolist()}
+
+
+def _mined(mi: MaintainableIndex) -> list:
+    return sorted(s for s in mi.index.interests if len(s) >= 2)
+
+
+def bench_adaptive(ds: str, n_per_phase: int, adapt_interval: int,
+                   iters: int, gate_speedup: bool) -> bool:
+    g = DATASETS[ds]()
+    k = 2
+
+    mi = MaintainableIndex.build(g, k, interests=[])
+    adapter = AdaptationController(
+        k, config=AdaptationConfig(budget=2, min_count=3.0, dwell=1,
+                                   swap_margin=2.0, decay=0.5))
+    svc = QueryService(Engine(mi.flush()), maintainer=mi, adapter=adapter,
+                       adapt_interval=adapt_interval, max_batch=16)
+    static_engine = Engine(MaintainableIndex.build(g, k, interests=[]).flush())
+    full_idx = cindex.build(g, k)
+    full_engine = Engine(full_idx)
+
+    stream = drifting_workload(g, ADAPTIVE_PHASES, n_per_phase, seed=11)
+    failed = False
+    for pi, (queries, hot) in enumerate(zip(stream, ADAPTIVE_PHASES)):
+        t0_rungs = svc.engine.telemetry.retry_rungs
+        us_serve = timeit(lambda: [svc.query(q) for q in queries],
+                          warmup=0, iters=1) / max(1, len(queries))
+        svc.flush()  # drain any adaptation ops proposed on the last tick
+        mined = _mined(mi)
+        emit(f"adaptive/{ds}/phase{pi}/serve", us_serve,
+             f"n_queries={len(queries)};mined={mined};"
+             f"adapt_rounds={svc.stats.adapt_rounds};"
+             f"rungs={svc.engine.telemetry.retry_rungs - t0_rungs}")
+
+        wins = 0
+        for name, labels in hot:
+            q = instantiate_template(name, list(labels))
+            truth = oracle.cpq_eval(g, q)
+            got_a = _rows(svc.engine.execute(q))
+            got_s = _rows(static_engine.execute(q))
+            got_f = _rows(full_engine.execute(q))
+            ok = got_a == got_s == got_f == truth
+            failed |= not ok
+
+            def rungs_of(engine, fn):
+                before = engine.telemetry.retry_rungs
+                us = timeit(fn, iters=iters)
+                return us, engine.telemetry.retry_rungs - before
+
+            us_a, r_a = rungs_of(svc.engine, lambda: svc.engine.execute(q))
+            us_s, r_s = rungs_of(static_engine,
+                                 lambda: static_engine.execute(q))
+            us_f, r_f = rungs_of(full_engine, lambda: full_engine.execute(q))
+            speedup = us_s / max(us_a, 1e-9)
+            if ok and speedup >= 2.0:
+                wins += 1
+            emit(f"adaptive/{ds}/phase{pi}/{name}", us_a,
+                 f"static_us={us_s:.1f};full_us={us_f:.1f};"
+                 f"speedup_vs_static={speedup:.2f}x;"
+                 f"vs_full={us_a / max(us_f, 1e-9):.2f}x;"
+                 f"rungs={r_a}/{r_s}/{r_f};"
+                 f"n_rows={len(truth)};"
+                 f"answers={'PASS' if ok else 'FAIL'}")
+        verdict = "PASS" if (wins >= 1 and not failed) else "FAIL"
+        emit(f"adaptive/{ds}/phase{pi}/acceptance", 0.0,
+             f"ge2x_wins={wins}/{len(hot)};"
+             f"answers==static==full==oracle;{verdict}")
+        failed |= gate_speedup and wins < 1
+
+    a_l2c, a_pairs = svc.engine.index.size_entries()
+    f_l2c, f_pairs = full_idx.size_entries()
+    frac = (a_l2c + a_pairs) / max(1, f_l2c + f_pairs)
+    emit(f"adaptive/{ds}/size", float(a_l2c + a_pairs),
+         f"full={f_l2c + f_pairs};fraction={frac:.3f};"
+         f"mined={_mined(mi)};"
+         f"inserted={svc.stats.interests_inserted};"
+         f"deleted={svc.stats.interests_deleted}")
+    if gate_speedup and frac > 0.5:
+        emit(f"adaptive/{ds}/size/acceptance", 0.0,
+             f"fraction={frac:.3f}>0.5;FAIL")
+        failed = True
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: small graph, speedup + size gates on")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        failed = bench_adaptive("skewed-hub-small", n_per_phase=60,
+                                adapt_interval=15, iters=2,
+                                gate_speedup=True)
+    else:
+        failed = bench_adaptive("skewed-hub", n_per_phase=120,
+                                adapt_interval=20, iters=3,
+                                gate_speedup=False)
+    if args.json:
+        from .common import write_json
+
+        write_json(args.json, bench="bench_adaptive", smoke=args.smoke)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

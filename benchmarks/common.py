@@ -28,8 +28,22 @@ DATASETS = {
     "gmark-small": lambda: gmark_citation(500, avg_degree=6, seed=3),
     "gmark-medium": lambda: gmark_citation(1500, avg_degree=6, seed=4),
     "skewed-hub": lambda: skewed_labeled_graph(seed=5),
+    # CI-scaled twin of skewed-hub for benches that pay host-side path
+    # enumeration per step (bench_adaptive's interest insertions)
+    "skewed-hub-small": lambda: skewed_labeled_graph(
+        n_vertices=96, wave=30, rare_edges=24, seed=5),
     "example": example_graph,
 }
+
+#: The drifting-workload phases of ``bench_adaptive`` on the skewed-hub
+#: graphs: phase 0 hammers forward hub/bridge templates (hot sequences
+#: (0,0) and (2,3)), phase 1 drifts to their *inverse-label* twins (hot
+#: sequences (6,6) and (9,8) — same shapes, disjoint sequence space), so
+#: convergence requires both mining AND eviction under a tight budget.
+ADAPTIVE_PHASES = [
+    [("T", (0, 0, 1)), ("S", (0, 0, 2, 3))],
+    [("T", (6, 6, 7)), ("S", (6, 6, 9, 8))],
+]
 
 #: Every ``emit`` row of the process, in order — the machine-readable
 #: twin of the CSV stream on stdout.

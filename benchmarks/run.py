@@ -26,6 +26,7 @@ BENCHES = {
     "fig11": "benchmarks.bench_scalability",  # graph-size scaling
     "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp reference
     "throughput": "benchmarks.bench_throughput",  # serving qps (PR 1)
+    "adaptive": "benchmarks.bench_adaptive",  # drifting-workload mining (PR 5)
 }
 
 

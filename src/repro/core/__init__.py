@@ -2,6 +2,8 @@
 the capacity-padded relational substrate, the backend-agnostic query
 engine (``backend`` — local; ``distributed`` — whole plans inside
 shard_map over a ``sharded_index`` layout), the cost-based optimizer
-(``optimizer`` over the ``stats`` view), lazy maintenance, baselines,
-and the semantics oracle.  ``docs/ARCHITECTURE.md`` maps how the
-modules fit together."""
+(``optimizer`` over the ``stats`` view), lazy maintenance, the
+workload-adaptive interest miner (``workload`` — sketch, benefit model
+and adaptation controller closing the serving loop back to the iaCPQx
+interest set), baselines, and the semantics oracle.
+``docs/ARCHITECTURE.md`` maps how the modules fit together."""

@@ -24,6 +24,8 @@ docstring), and plan-shape batching.  Constructing the engine with a
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from .backend import (  # noqa: F401  (QueryCaps/run_plan* are public API)
@@ -57,6 +59,38 @@ def _has_identity(shape) -> bool:
                if isinstance(s, tuple))
 
 
+@dataclasses.dataclass
+class LadderTelemetry:
+    """Cumulative capacity-ladder counters of one engine (reset on
+    demand, *not* on rebind — they track the engine's lifetime traffic).
+
+    Wall-clock hides retries: a query that ladders three rungs before
+    fitting looks like one slow query.  These counters make estimator
+    regressions (and estimator wins, e.g. from richer statistics or an
+    adapted interest set) directly visible — ``ServiceStats`` and the
+    bench JSON surface them.
+
+    ``queries``      — queries evaluated (batch lanes count individually);
+    ``dispatches``   — device dispatches, including every retry rung;
+    ``retry_rungs``  — ladder rungs climbed past the first attempt,
+                       summed per query/lane (0 when the estimate fit);
+    ``default_jumps``— escalations that hit the jump-to-default rung
+                       (attempt >= 3 — the expensive worst-case dispatch).
+    """
+
+    queries: int = 0
+    dispatches: int = 0
+    retry_rungs: int = 0
+    default_jumps: int = 0
+
+    def snapshot(self) -> "LadderTelemetry":
+        return dataclasses.replace(self)
+
+    def reset(self) -> None:
+        self.queries = self.dispatches = 0
+        self.retry_rungs = self.default_jumps = 0
+
+
 class Engine:
     """Query engine bound to a built index.
 
@@ -78,6 +112,7 @@ class Engine:
         self.mesh = mesh
         self.axis = axis
         self.optimize = optimize
+        self.telemetry = LadderTelemetry()
         self.rebind(index)
 
     def rebind(self, index: CPQxIndex) -> None:
@@ -128,12 +163,16 @@ class Engine:
         to 2x the largest *estimated intermediate* (for a class-space
         conjunction that is a sound upper bound — the min operand — so a
         selective conjunction gets caps near its answer instead of near
-        its largest lookup).  Without one, the stats-free fallback keeps
-        the PR-1 behavior: 2x the largest single-lookup materialization.
-        Either way the class cap covers the largest LOOKUP's class list
-        exactly, and the sticky-overflow retry (doubling along the same
-        power-of-two ladder, so executables are shared) keeps undersized
-        estimates exact."""
+        its largest lookup), and the join cap to the plan's largest
+        pre-dedup witness bound (``PlanEstimate.max_join`` — with the
+        endpoint/fanout statistics of PR 5 that bound is sound at leaf
+        joins, so skewed hub fanout no longer ladders what the uniform
+        estimate used to under-size).  Without one, the stats-free
+        fallback keeps the PR-1 behavior: 2x the largest single-lookup
+        materialization.  Either way the class cap covers the largest
+        LOOKUP's class list exactly, and the sticky-overflow retry
+        (doubling along the same power-of-two ladder, so executables are
+        shared) keeps undersized estimates exact."""
         max_classes, max_pairs = 1, 1
         for start, length in np.asarray(ranges, np.int64).reshape(-1, 2):
             max_classes = max(max_classes, int(length))
@@ -141,20 +180,23 @@ class Engine:
                 cls = self._l2c_host[start: start + length]
                 max_pairs = max(max_pairs, int(self._class_sizes[cls].sum()))
         headroom = 2
+        max_join = 0
         if plan is not None:
             est = estimate_plan(plan, self.stats)
             max_pairs = int(max(est.max_pairs, est.pairs))
             # conjunction bounds are exact (min operand) but join outputs
-            # are uniform-fanout *estimates* — give plans with pair-space
-            # joins double the headroom so skewed fanout rarely ladders
+            # are *estimates* — give plans with pair-space joins double
+            # the headroom so residual misestimates rarely ladder
             headroom = 4 if est.max_join > 0 else 2
+            max_join = int(min(est.max_join, 4 * self._default_caps.join_cap))
         floor = self.index.n_vertices if _has_identity(shape) else 0
         # never *start* above the worst-case default (the retry ladder can
         # still climb past it if a join genuinely needs more)
         ceiling = max(self._default_caps.pair_cap, _pow2(floor))
         pair_cap = min(_pow2(max(64, headroom * max_pairs, floor)), ceiling)
+        join_cap = max(2 * pair_cap, _pow2(max_join))
         return QueryCaps(class_cap=_pow2(max(16, max_classes)),
-                         pair_cap=pair_cap, join_cap=2 * pair_cap)
+                         pair_cap=pair_cap, join_cap=join_cap)
 
     def lookup_ranges(self, plan) -> np.ndarray:
         """(n_lookups, 2) int32 (start, len) rows, in plan order — the
@@ -174,11 +216,16 @@ class Engine:
         shape = plan_shape(plan)
         caps = caps or self.estimate_caps(ranges, shape,
                                           plan if self.optimize else None)
+        self.telemetry.queries += 1
         for attempt in range(max_retries):
+            self.telemetry.dispatches += 1
             rows, overflow = self.backend.run(shape, caps, ranges)
             if not overflow:
                 return rows
+            self.telemetry.retry_rungs += 1
             caps = self._escalate(caps, attempt)
+            if attempt >= 3:
+                self.telemetry.default_jumps += 1
         raise RuntimeError("query overflow not resolved after retries")
 
     def _escalate(self, caps: QueryCaps, attempt: int) -> QueryCaps:
@@ -261,19 +308,25 @@ class Engine:
                 work.append((shape, cur_caps, cur_members))
 
         results: list = [None] * len(queries)
+        self.telemetry.queries += len(queries)
         for shape, grp_caps, members in work:
             pending = np.asarray(members, np.int64)
             ranges = np.stack([all_ranges[i] for i in members])
             for attempt in range(max_retries):
+                self.telemetry.dispatches += 1
                 rows, overflow = self.backend.run_batch(shape, grp_caps, ranges)
                 for lane, r in enumerate(rows):
                     if r is not None:
                         results[pending[lane]] = r
                 if not overflow.any():
                     break
+                # only the lanes whose own flag tripped climb a rung
+                self.telemetry.retry_rungs += int(overflow.sum())
                 pending = pending[overflow]
                 ranges = ranges[overflow]
                 grp_caps = self._escalate(grp_caps, attempt)
+                if attempt >= 3:
+                    self.telemetry.default_jumps += 1
             else:
                 raise RuntimeError("query overflow not resolved after retries")
         return results

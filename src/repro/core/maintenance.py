@@ -249,20 +249,73 @@ class MaintainableIndex:
     def delete_interest(self, seq: tuple) -> None:
         """Sec. V-C: drop one interest sequence — just remove the l2c entry
         (classes stay split; lazily correct)."""
-        self._require_interest_aware("delete_interest")
-        seq = tuple(seq)
-        self.index.l2c.pop(seq, None)
-        self.index.interests = frozenset(self.index.interests - {seq})
+        self.apply_interest_updates([("delete_interest", seq)])
 
     def insert_interest(self, seq: tuple) -> None:
         """Sec. V-C: add an interest sequence — enumerate its pairs and
         re-insert them with fresh (now seq-aware) classes."""
-        self._require_interest_aware("insert_interest")
-        seq = tuple(seq)
-        self.index.interests = frozenset(self.index.interests | {seq})
-        seqs = oracle.enumerate_pairs(self.g, self.index.k)
-        affected = {p for p, ss in seqs.items() if seq in ss}
-        self._reinsert(affected, self.g)
+        self.apply_interest_updates([("insert_interest", seq)])
+
+    def check_interest_op(self, op) -> None:
+        """Validate one interest op tuple against this mirror — THE
+        precondition set of ``apply_interest_updates``, shared with the
+        service's enqueue-time check (one validator, so the two layers
+        can never drift and a queued batch can never poison a coalesced
+        drain).  Raises ``ValueError`` on violation."""
+        self._require_interest_aware("interest updates")
+        kind = op[0]
+        if kind not in ("insert_interest", "delete_interest"):
+            raise ValueError(f"unknown interest op {kind!r}")
+        seq = tuple(int(x) for x in op[1])
+        if kind == "insert_interest":
+            k = self.index.k
+            if not 1 <= len(seq) <= k:
+                raise ValueError(
+                    f"interest {seq} must have length in [1, {k}]")
+            if any(not 0 <= x < self.g.alphabet_size for x in seq):
+                raise ValueError(
+                    f"interest {seq} has labels outside the alphabet")
+
+    def apply_interest_updates(self, updates: list) -> None:
+        """Apply a whole batch of interest updates with ONE path
+        enumeration (Sec. V-C, batched the same way ``apply_updates``
+        batches graph updates).
+
+        ``updates`` is a list of ``("insert_interest", seq)`` /
+        ``("delete_interest", seq)`` tuples, applied in order *logically*
+        but executed as one net change: the final interest set is
+        computed first, net-removed sequences drop their ``l2c`` entries
+        (classes stay split — lazy), and the pairs realizing every
+        net-added sequence are collected from a single
+        ``oracle.enumerate_pairs`` pass and re-inserted with fresh
+        classes under the final interest set.  An insert+delete of the
+        same sequence in one batch is a net no-op, exactly as if the two
+        calls had run back to back.  Answers depend only on (graph,
+        interests), so executing the net change is answer-identical to
+        the sequential execution — only the lazy partition (the pruning
+        power before a rebuild) can differ.
+        """
+        self._require_interest_aware("interest updates")
+        idx = self.index
+        final = set(idx.interests)
+        for op in updates:
+            self.check_interest_op(op)
+            seq = tuple(int(x) for x in op[1])
+            if op[0] == "insert_interest":
+                final.add(seq)
+            else:
+                final.discard(seq)
+        removed = set(idx.interests) - final
+        added = final - set(idx.interests)
+        if not removed and not added:
+            return
+        for seq in removed:
+            idx.l2c.pop(seq, None)
+        idx.interests = frozenset(final)
+        if added:
+            seqs = oracle.enumerate_pairs(self.g, idx.k)
+            affected = {p for p, ss in seqs.items() if ss & added}
+            self._reinsert(affected, self.g)
 
     # ------------------------------------------------------------------ #
     def query(self, q) -> set:

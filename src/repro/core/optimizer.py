@@ -29,9 +29,13 @@ serving layer are untouched; ``plan_query`` remains the stats-free
 fallback (the numpy oracle keeps using it, so differential tests stay
 independent of this module).  Cardinality estimates are exact for
 LOOKUP leaves and conservative upper bounds for conjunctions; joins use
-the classic uniform-endpoint estimate |A|·|B| / |V|.  A misestimate can
-never change answers — only capacities — because every plan still runs
-under the sticky-overflow double-and-retry ladder (see
+the classic distinct-value estimate |A|·|B| / max(V(A.t), V(B.s)) with
+the exact per-sequence endpoint statistics of
+:meth:`~repro.core.stats.IndexStats.seq_endpoints`, capped by the sound
+fanout bounds |A.t|·max_out(B) and |B.s|·max_in(A) — and degrade to the
+uniform |A|·|B| / |V| guess when a view has no pair columns.  A
+misestimate can never change answers — only capacities — because every
+plan still runs under the sticky-overflow double-and-retry ladder (see
 ``core.backend``).
 
 Host-side only: no jax import.
@@ -64,6 +68,9 @@ MAX_SPLIT_ENUM = 256
 # ---------------------------------------------------------------------- #
 
 
+_INF = float("inf")
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanEstimate:
     """Estimated execution profile of one physical plan (or sub-plan).
@@ -75,7 +82,13 @@ class PlanEstimate:
     ``max_pairs``— largest pair-space relation materialized anywhere
                    (drives ``QueryCaps.pair_cap``);
     ``max_join`` — largest pre-dedup expansion-join output (drives
-                   ``QueryCaps.join_cap``).
+                   ``QueryCaps.join_cap``);
+    ``d_src`` / ``d_dst`` — estimated distinct source/target endpoints
+                   (exact at LOOKUP leaves with endpoint statistics, else
+                   the uniform |V| assumption — which recovers the
+                   classic |A|·|B| / |V| join estimate verbatim);
+    ``max_out`` / ``max_in`` — out/in fanout upper bound of the result
+                   (inf when unknown).
     """
 
     classes: float | None
@@ -83,39 +96,98 @@ class PlanEstimate:
     cost: float
     max_pairs: float
     max_join: float
+    d_src: float = _INF
+    d_dst: float = _INF
+    max_out: float = _INF
+    max_in: float = _INF
 
 
 def join_card(a: float, b: float, n_vertices: int) -> float:
     """Uniform-endpoint composition estimate: |A ∘ B| ≈ |A|·|B| / |V|,
-    clamped to [1, |A|·|B|]; exactly 0 when either side is empty."""
+    clamped to [1, |A|·|B|]; exactly 0 when either side is empty.  The
+    stats-free fallback of :func:`join_est` (and the form the pre-PR-5
+    cost model used everywhere)."""
     if a <= 0 or b <= 0:
         return 0.0
     return min(a * b, max(1.0, a * b / max(1, n_vertices)))
+
+
+def join_est(el: "PlanEstimate", er: "PlanEstimate",
+             n_vertices: int) -> "PlanEstimate":
+    """Endpoint-aware composition estimate, as a composed profile.
+
+    Cardinality is the distinct-value estimate |A|·|B| / max(V(A.t),
+    V(B.s)) — exactly |A|·|B| / |V| when endpoint statistics are absent
+    (both distinct counts default to |V|) — capped by the *sound* upper
+    bounds on the result: every A pair expands through at most
+    max_out(B) B pairs (so witnesses <= |A|·max_out(B), symmetrically
+    <= |B|·max_in(A)), and distinct result pairs additionally fit the
+    endpoint grid V(A.s)·V(B.t).  The witness bound lands in
+    ``max_join`` — it sizes the pre-dedup expansion buffer
+    (``QueryCaps.join_cap``), where the uniform estimate's
+    under-sizing on skewed fanout is exactly what used to ladder the
+    caps (ROADMAP's C4 case).  Endpoint profiles propagate: sources of
+    A∘B are sources of A, targets are targets of B, fanouts compose
+    multiplicatively."""
+    a, b = el.pairs, er.pairs
+    if a <= 0 or b <= 0:
+        return PlanEstimate(None, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    v = float(max(1, n_vertices))
+    dd, ds = min(el.d_dst, v), min(er.d_src, v)  # unknown (inf) -> |V|
+    witnesses = min(a * b, a * er.max_out, b * el.max_in)
+    upper = min(witnesses, min(el.d_src, v) * min(er.d_dst, v))
+    out = min(max(1.0, a * b / max(1.0, dd, ds)), max(1.0, upper))
+    return PlanEstimate(
+        None, out, 0.0, 0.0, max_join=max(1.0, witnesses),
+        d_src=min(el.d_src, out), d_dst=min(er.d_dst, out),
+        max_out=el.max_out * er.max_out, max_in=el.max_in * er.max_in)
+
+
+def _leaf_est(seq: tuple, stats: IndexStats) -> PlanEstimate:
+    """Profile of one indexed segment: exact cardinalities, and exact
+    endpoint statistics when the view carries the pair columns."""
+    cls = float(stats.seq_classes(seq))
+    p = float(stats.seq_pairs(seq))
+    ep = stats.seq_endpoints(seq)
+    if ep is None:
+        return PlanEstimate(cls, p, cls, 0.0, 0.0)
+    return PlanEstimate(cls, p, cls, 0.0, 0.0,
+                        d_src=float(ep.d_src), d_dst=float(ep.d_dst),
+                        max_out=float(ep.max_out), max_in=float(ep.max_in))
+
+
+def _conj_endpoints(el: PlanEstimate, er: PlanEstimate, pairs: float):
+    """Endpoint profile of an intersection — a subset of both sides."""
+    return dict(d_src=min(el.d_src, er.d_src, pairs),
+                d_dst=min(el.d_dst, er.d_dst, pairs),
+                max_out=min(el.max_out, er.max_out),
+                max_in=min(el.max_in, er.max_in))
 
 
 def _est(node, stats: IndexStats) -> PlanEstimate:
     kind = node[0]
     if kind == "lookup":
         segs = node[1]
-        first = tuple(segs[0])
-        cls = float(stats.seq_classes(first))
-        cur = float(stats.seq_pairs(first))
+        cur = _leaf_est(tuple(segs[0]), stats)
         if len(segs) == 1:
-            return PlanEstimate(cls, cur, cls, 0.0, 0.0)
+            return cur
         # multi-segment chain: every segment materializes, then folds
         # left-to-right through expansion joins (the walker's semantics)
-        cost, maxp, maxj = cur, cur, 0.0
+        cost, maxp, maxj = cur.pairs, cur.pairs, 0.0
         for seg in segs[1:]:
-            p = float(stats.seq_pairs(tuple(seg)))
-            out = join_card(cur, p, stats.n_vertices)
-            cost += p + out
-            maxp = max(maxp, p, out)
-            maxj = max(maxj, out)
+            nxt = _leaf_est(tuple(seg), stats)
+            out = join_est(cur, nxt, stats.n_vertices)
+            cost += nxt.pairs + out.pairs
+            maxp = max(maxp, nxt.pairs, out.pairs)
+            maxj = max(maxj, out.max_join)  # pre-dedup witness bound
             cur = out
-        return PlanEstimate(None, cur, cost, maxp, maxj)
+        return PlanEstimate(None, cur.pairs, cost, maxp, maxj,
+                            d_src=cur.d_src, d_dst=cur.d_dst,
+                            max_out=cur.max_out, max_in=cur.max_in)
     if kind == "identity":
         v = float(stats.n_vertices)
-        return PlanEstimate(None, v, v, v, 0.0)
+        return PlanEstimate(None, v, v, v, 0.0,
+                            d_src=v, d_dst=v, max_out=1.0, max_in=1.0)
     if kind == "conj_id":
         e = _est(node[1], stats)
         if e.classes is not None:
@@ -125,10 +197,14 @@ def _est(node, stats: IndexStats) -> PlanEstimate:
             else:
                 pairs = min(e.pairs, float(stats.n_vertices))
             return PlanEstimate(e.classes, pairs, e.cost + e.classes,
-                                e.max_pairs, e.max_join)
+                                e.max_pairs, e.max_join,
+                                d_src=pairs, d_dst=pairs,
+                                max_out=1.0, max_in=1.0)
         pairs = min(e.pairs, float(stats.n_vertices))
         return PlanEstimate(None, pairs, e.cost + e.pairs,
-                            max(e.max_pairs, e.pairs), e.max_join)
+                            max(e.max_pairs, e.pairs), e.max_join,
+                            d_src=pairs, d_dst=pairs,
+                            max_out=1.0, max_in=1.0)
     if kind == "conj":
         el, er = _est(node[1], stats), _est(node[2], stats)
         maxj = max(el.max_join, er.max_join)
@@ -136,20 +212,28 @@ def _est(node, stats: IndexStats) -> PlanEstimate:
             # Prop. 4.1: class-id intersection; |result ∩| pairs is
             # bounded by either side's total (a sound upper bound)
             cls = min(el.classes, er.classes)
-            return PlanEstimate(cls, min(el.pairs, er.pairs),
+            pairs = min(el.pairs, er.pairs)
+            return PlanEstimate(cls, pairs,
                                 el.cost + er.cost + cls,
-                                max(el.max_pairs, er.max_pairs), maxj)
+                                max(el.max_pairs, er.max_pairs), maxj,
+                                **_conj_endpoints(el, er, pairs))
         lp, rp = el.pairs, er.pairs  # both sides materialize
-        return PlanEstimate(None, min(lp, rp),
+        pairs = min(lp, rp)
+        return PlanEstimate(None, pairs,
                             el.cost + er.cost + lp + rp,
-                            max(el.max_pairs, er.max_pairs, lp, rp), maxj)
+                            max(el.max_pairs, er.max_pairs, lp, rp), maxj,
+                            **_conj_endpoints(el, er, pairs))
     if kind == "join":
         el, er = _est(node[1], stats), _est(node[2], stats)
         lp, rp = el.pairs, er.pairs
-        out = join_card(lp, rp, stats.n_vertices)
-        return PlanEstimate(None, out, el.cost + er.cost + lp + rp + out,
-                            max(el.max_pairs, er.max_pairs, lp, rp, out),
-                            max(el.max_join, er.max_join, out))
+        out = join_est(el, er, stats.n_vertices)
+        return PlanEstimate(None, out.pairs,
+                            el.cost + er.cost + lp + rp + out.pairs,
+                            max(el.max_pairs, er.max_pairs, lp, rp,
+                                out.pairs),
+                            max(el.max_join, er.max_join, out.max_join),
+                            d_src=out.d_src, d_dst=out.d_dst,
+                            max_out=out.max_out, max_in=out.max_in)
     raise ValueError(kind)
 
 
@@ -161,7 +245,9 @@ def estimate_plan(plan, stats: IndexStats) -> PlanEstimate:
     if e.classes is None:
         return e
     return PlanEstimate(e.classes, e.pairs, e.cost + e.pairs,
-                        max(e.max_pairs, e.pairs), e.max_join)
+                        max(e.max_pairs, e.pairs), e.max_join,
+                        d_src=e.d_src, d_dst=e.d_dst,
+                        max_out=e.max_out, max_in=e.max_in)
 
 
 # ---------------------------------------------------------------------- #
@@ -230,21 +316,22 @@ def _chain_dp(items: list, stats: IndexStats):
     ests = [estimate_plan(it, stats) for it in items]
     if n == 1:
         return items[0], ests[0].cost
-    card = [[0.0] * n for _ in range(n)]
+    prof = [[None] * n for _ in range(n)]  # interval cardinality profile
     cost = [[0.0] * n for _ in range(n)]
     cut = [[0] * n for _ in range(n)]
     for i in range(n):
-        card[i][i] = ests[i].pairs
+        prof[i][i] = ests[i]
         cost[i][i] = ests[i].cost
     for span in range(2, n + 1):
         for i in range(0, n - span + 1):
             j = i + span - 1
-            card[i][j] = join_card(card[i][j - 1], card[j][j],
-                                   stats.n_vertices)
+            prof[i][j] = join_est(prof[i][j - 1], prof[j][j],
+                                  stats.n_vertices)
             best, best_m = None, i
             for m in range(i, j):
                 c = (cost[i][m] + cost[m + 1][j]
-                     + card[i][m] + card[m + 1][j] + card[i][j])
+                     + prof[i][m].pairs + prof[m + 1][j].pairs
+                     + prof[i][j].pairs)
                 if best is None or c < best:
                     best, best_m = c, m
             cost[i][j], cut[i][j] = best, best_m

@@ -46,6 +46,28 @@ A graph update re-enters the service two ways:
   drained first, so the service serves a strict serializable history:
   every query sees exactly the writes applied before it was submitted.
 
+Since PR 5 the write path also carries **interest updates** (Sec. V-C):
+``("insert_interest", seq)`` / ``("delete_interest", seq)`` ops — from a
+caller or from the adaptation loop below — queue exactly like graph
+updates and drain in the SAME coalesced round: one mirror batch per op
+kind, one flush, one rebind, one epoch bump, regardless of how graph
+and interest writes interleave.  (Graph ops apply before interest ops
+within a round; answers depend only on the final (graph, interest set),
+so the reorder is answer-identical to sequential application — see
+``MaintainableIndex.apply_interest_updates``.)
+
+**The adaptation loop** (``core.workload``): a service constructed with
+an ``adapter`` (:class:`~repro.core.workload.AdaptationController`)
+becomes a self-tuning iaCPQx.  Every query reaching ``_plan`` is
+harvested into the adapter's heavy-hitter sketch; every
+``adapt_interval`` planned queries the controller prices the hot
+sequences against the engine's live ``IndexStats`` and proposes
+coalesced interest ops, which are *queued through the write path above*
+— an adaptation round is indistinguishable from any other write batch
+(same flush, same epoch-keyed invalidation, same reshard on a mesh
+engine), and a misjudged proposal can only cost performance, never
+answers.
+
 The service is backend-agnostic: an ``Engine`` constructed with a mesh
 (``Engine(index, mesh=...)`` — the sharded backend of
 ``core.distributed``) serves the identical API and answers through this
@@ -66,8 +88,10 @@ from .index import CPQxIndex
 from .query import CPQ, plan_shape
 
 
-_UPDATE_OPS = frozenset({"insert_edge", "delete_edge", "change_label",
-                         "delete_vertex", "insert_vertex"})
+_GRAPH_OPS = frozenset({"insert_edge", "delete_edge", "change_label",
+                        "delete_vertex", "insert_vertex"})
+_INTEREST_OPS = frozenset({"insert_interest", "delete_interest"})
+_UPDATE_OPS = _GRAPH_OPS | _INTEREST_OPS
 
 
 @dataclasses.dataclass
@@ -94,6 +118,13 @@ class ServiceStats:
     plan_hits: int = 0
     updates_applied: int = 0  # individual update ops through apply_updates
     update_batches: int = 0  # coalesced mirror/device maintenance rounds
+    retry_rungs: int = 0  # capacity-ladder rungs climbed by this service's
+    # traffic (delta of Engine.telemetry across flushes) — estimator
+    # health beyond wall-clock
+    sequences_observed: int = 0  # candidate seqs harvested into the sketch
+    adapt_rounds: int = 0  # AdaptationController.propose invocations
+    interests_inserted: int = 0  # mined interest insertions drained
+    interests_deleted: int = 0  # mined interest deletions drained
 
 
 class QueryService:
@@ -102,7 +133,7 @@ class QueryService:
     def __init__(self, engine: Engine, *, max_batch: int = 64,
                  result_cache_size: int = 1024, plan_cache_size: int = 256,
                  caps: QueryCaps | None = None, max_retries: int = 10,
-                 maintainer=None):
+                 maintainer=None, adapter=None, adapt_interval: int = 64):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
@@ -112,7 +143,24 @@ class QueryService:
         self.graph_epoch = 0
         self.stats = ServiceStats()
         self.maintainer = maintainer  # MaintainableIndex enabling the write path
+        # AdaptationController turning traffic into interest proposals;
+        # requires an interest-aware maintainer (the proposals ride the
+        # write path)
+        self.adapter = adapter
+        self.adapt_interval = adapt_interval
+        if adapter is not None:
+            if maintainer is None or maintainer.index.interests is None:
+                raise ValueError(
+                    "an adapter requires an interest-aware maintainer — "
+                    "MaintainableIndex.build(g, k, interests=[...])")
+            if adapter.k > maintainer.index.k:
+                raise ValueError(
+                    f"adapter harvests windows up to k={adapter.k} but "
+                    f"the index is k={maintainer.index.k} — its "
+                    "proposals could never be indexed")
         self._next_rid = 0
+        self._planned_since_adapt = 0
+        self._rungs_seen = engine.telemetry.retry_rungs
         self._queue: list[QueryRequest] = []
         self._pending_updates: list = []
         self._results: OrderedDict = OrderedDict()  # (epoch, query) -> rows
@@ -136,6 +184,12 @@ class QueryService:
             req.result, req.done, req.from_cache = cached, True, True
             self.stats.cache_hits += 1
             self.stats.served += 1
+            # a cache hit never reaches _plan, but it IS workload: a hot
+            # template must keep voting while it is being served for
+            # free, or the sketch would starve exactly when a sequence
+            # is hottest
+            self._observe(query)
+            self._maybe_adapt()
             return req
         self._queue.append(req)
         if len(self._queue) >= self.max_batch:
@@ -162,6 +216,7 @@ class QueryService:
             if cached is not None:
                 req.result, req.done, req.from_cache = cached, True, True
                 self.stats.cache_hits += 1
+                self._observe(req.query)  # served for free, still votes
             else:
                 todo.append(req)
         by_query: dict = {}
@@ -169,6 +224,12 @@ class QueryService:
             by_query.setdefault(req.query, []).append(req)
         queries = list(by_query)
         if queries:
+            # _plan votes once per distinct query; folded duplicates are
+            # workload too — credit them, or a template submitted N
+            # times per flush would earn 1/N of its true frequency
+            for q, reqs in by_query.items():
+                if len(reqs) > 1:
+                    self._observe(q, weight=len(reqs) - 1, tick=False)
             plans = [self._plan(q) for q in queries]
             try:
                 rows = self.engine.execute_batch(
@@ -185,7 +246,13 @@ class QueryService:
                 self._cache_put(q, res)
                 for req in by_query[q]:
                     req.result, req.done = res, True
+            # ladder telemetry: fold the engine's rung delta into the
+            # service view (estimator health is a serving-layer signal)
+            rungs = self.engine.telemetry.retry_rungs
+            self.stats.retry_rungs += rungs - self._rungs_seen
+            self._rungs_seen = rungs
         self.stats.served += len(batch)
+        self._maybe_adapt()
         return batch
 
     def query(self, query: CPQ) -> np.ndarray:
@@ -208,16 +275,18 @@ class QueryService:
     # ------------------------------------------------------------------ #
 
     def apply_updates(self, updates: list) -> None:
-        """The write path: queue a batch of graph updates (op tuples in
-        ``MaintainableIndex.apply_updates`` form, e.g.
-        ``("insert_edge", v, u, lbl)``).
+        """The write path: queue a batch of graph and/or interest updates
+        (op tuples in ``MaintainableIndex.apply_updates`` /
+        ``apply_interest_updates`` form, e.g. ``("insert_edge", v, u,
+        lbl)`` or ``("insert_interest", (l1, l2))``).
 
         Reads already queued are drained first (they targeted the
         pre-update graph), then the updates are queued and the epoch
         bumps — O(1) invalidation of every cached answer.  The expensive
         work (mirror surgery + mirror→device flush) is deferred to the
-        next query drain, so consecutive ``apply_updates`` calls coalesce
-        into one batched maintenance round."""
+        next query drain, so consecutive ``apply_updates`` calls —
+        graph, interest, or mixed — coalesce into one batched
+        maintenance round with a single flush + rebind."""
         if self.maintainer is None:
             raise RuntimeError(
                 "no maintainer bound — construct the service with "
@@ -228,29 +297,76 @@ class QueryService:
         for op in updates:  # reject malformed ops at enqueue, not drain
             if not op or op[0] not in _UPDATE_OPS:
                 raise ValueError(f"unknown update op {op!r}")
+            if op[0] in _INTEREST_OPS:
+                self._check_interest_op(op)
         if self._queue:
             self.flush()  # reads before the write see the pre-update graph
         self._pending_updates.extend(updates)
         self.bump_epoch()
 
+    def insert_interest(self, seq) -> None:
+        """Queue one interest insertion (Sec. V-C) through the write
+        path — coalesces with any queued graph updates into the same
+        flush + rebind instead of forcing its own."""
+        self.apply_updates([("insert_interest", tuple(seq))])
+
+    def delete_interest(self, seq) -> None:
+        """Queue one interest deletion through the write path."""
+        self.apply_updates([("delete_interest", tuple(seq))])
+
+    def _check_interest_op(self, op) -> None:
+        """Enqueue-time validation of an interest op: everything the
+        mirror would reject at drain time is rejected here instead —
+        the SAME validator the mirror runs
+        (``MaintainableIndex.check_interest_op``), so a queued interest
+        batch can never poison a coalesced round."""
+        self.maintainer.check_interest_op(op)
+
     def _drain_updates(self) -> None:
-        """Coalesce every queued update into one mirror batch + one
-        mirror→device flush, and rebind the engine to the flushed
-        arrays."""
+        """Coalesce every queued update into one maintenance round — one
+        graph mirror batch + one interest mirror batch + ONE
+        mirror→device flush — and rebind the engine to the flushed
+        arrays.
+
+        Graph ops apply before interest ops regardless of enqueue order:
+        answers depend only on the final (graph, interest set), and the
+        interest batch enumerates pairs on the post-batch graph, so the
+        net effect is answer-identical to sequential application (only
+        the lazy partition — pruning power until a rebuild — can
+        differ)."""
         if not self._pending_updates:
             return
         ups, self._pending_updates = self._pending_updates, []
+        graph_ops = [op for op in ups if op[0] in _GRAPH_OPS]
+        int_ops = [op for op in ups if op[0] in _INTEREST_OPS]
         try:
-            self.maintainer.apply_updates(ups)
+            if graph_ops:
+                self.maintainer.apply_updates(graph_ops)
         except Exception:
             # the mirror validates before mutating, so a failed batch left
             # it untouched: requeue so ops coalesced into this batch
             # aren't silently dropped
             self._pending_updates = ups + self._pending_updates
             raise
+        try:
+            if int_ops:
+                self.maintainer.apply_interest_updates(int_ops)
+        except Exception:
+            # every interest precondition was validated at enqueue, so
+            # this is a bug path — but the graph half already applied:
+            # requeue only the interest half and publish the graph half
+            self._pending_updates = int_ops + self._pending_updates
+            self.engine.rebind(self.maintainer.flush())
+            self.stats.updates_applied += len(graph_ops)
+            self.stats.update_batches += 1
+            raise
         self.engine.rebind(self.maintainer.flush())
         self.stats.updates_applied += len(ups)
         self.stats.update_batches += 1
+        self.stats.interests_inserted += sum(
+            op[0] == "insert_interest" for op in int_ops)
+        self.stats.interests_deleted += sum(
+            op[0] == "delete_interest" for op in int_ops)
 
     def rebind(self, index: CPQxIndex) -> None:
         """Swap in a rebuilt index (after ``core.maintenance`` mirror
@@ -266,6 +382,52 @@ class QueryService:
         """O(1) invalidation: results *and* plans are keyed by epoch, so
         stale entries become unreachable and age out of their LRUs."""
         self.graph_epoch += 1
+
+    # ------------------------------------------------------------------ #
+    # the adaptation loop (core.workload)
+    # ------------------------------------------------------------------ #
+
+    def _maybe_adapt(self) -> None:
+        if self.adapter is None:
+            return
+        if self._planned_since_adapt < self.adapt_interval:
+            return
+        self.adapt()
+
+    def adapt(self) -> list:
+        """Run one adaptation round NOW: price the sketch's heavy
+        hitters against the engine's live statistics and queue the
+        controller's interest proposals on the write path (they drain —
+        one flush, one rebind, one epoch bump — with whatever else is
+        queued at the next query drain).  Returns the proposed ops.
+
+        Called automatically from ``flush`` every ``adapt_interval``
+        planned queries; callable directly for checkpoint-style control
+        (benchmarks, tests)."""
+        if self.adapter is None:
+            raise RuntimeError(
+                "no adapter bound — construct the service with "
+                "QueryService(engine, maintainer=..., "
+                "adapter=AdaptationController(k))")
+        self._planned_since_adapt = 0
+        self.stats.adapt_rounds += 1
+        ops = self.adapter.propose(
+            self.engine.stats, self.maintainer.index.interests)
+        # the queue invariant holds for the controller too: a proposal
+        # the mirror would reject (e.g. mined from a query over labels
+        # outside the alphabet) is dropped, never queued — one bad
+        # proposal must not poison every later coalesced round
+        valid = []
+        for op in ops:
+            try:
+                self._check_interest_op(op)
+            except ValueError:
+                continue
+            valid.append(op)
+        if valid:
+            self._pending_updates.extend(valid)
+            self.bump_epoch()
+        return valid
 
     # ------------------------------------------------------------------ #
     # caches
@@ -288,7 +450,22 @@ class QueryService:
         while len(self._results) > self._result_cache_size:
             self._results.popitem(last=False)
 
+    def _observe(self, query: CPQ, weight: float = 1.0,
+                 tick: bool = True) -> None:
+        """Feed one served query into the adaptation sketch (``weight``
+        credits folded duplicates; ``tick`` advances the adapt-interval
+        clock)."""
+        if self.adapter is None:
+            return
+        self.stats.sequences_observed += self.adapter.observe(query, weight)
+        if tick:
+            self._planned_since_adapt += 1
+
     def _plan(self, query: CPQ):
+        # every planned query votes, plan-cache hit or miss — a hot
+        # template repeating within one epoch is exactly the frequency
+        # signal the sketch exists to catch
+        self._observe(query)
         key = (self.graph_epoch, query)
         if key in self._plans:
             self._plans.move_to_end(key)

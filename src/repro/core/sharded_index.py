@@ -231,6 +231,24 @@ def replicated_stats(sharded: ShardedIndexArrays, n_vertices: int,
 
     starts = np.asarray(sharded.class_starts, np.int64)
     sizes = (starts[:, 1:] - starts[:, :-1]).sum(axis=0)
+    # endpoint statistics need the actual pairs: every class lives whole
+    # on one shard, so concatenating the valid per-shard prefixes and
+    # re-sorting by class rebuilds the global (class, v, u) columns — the
+    # distinct-endpoint/fanout numbers are order-insensitive within a
+    # class, so this view is statistic-identical to the pre-shard one.
+    # Deferred to the first seq_endpoints() call: the reassembly is
+    # O(total pairs), far beyond the replicated few-KB metadata.
+    def fetch():
+        cc = np.asarray(sharded.c2p_counts)
+        ccls, cv, cu = (np.asarray(x) for x in
+                        (sharded.c2p_cls, sharded.c2p_v, sharded.c2p_u))
+        rows = [np.stack([ccls[s, :cc[s]], cv[s, :cc[s]], cu[s, :cc[s]]], 1)
+                for s in range(sharded.n_shards)]
+        flat = (np.concatenate(rows) if rows
+                else np.zeros((0, 3), np.int64))
+        flat = flat[np.argsort(flat[:, 0].astype(np.int64), kind="stable")]
+        return flat[:, 1], flat[:, 2]
+
     return IndexStats.from_host_arrays(
         n_vertices=n_vertices,
         n_classes=int(sharded.n_classes),
@@ -241,6 +259,7 @@ def replicated_stats(sharded: ShardedIndexArrays, n_vertices: int,
         l2c_cls=np.asarray(sharded.l2c_cls),
         l2c_count=int(sharded.l2c_count),
         class_cyclic=np.asarray(sharded.class_cyclic),
+        c2p_fetch=fetch,
     )
 
 

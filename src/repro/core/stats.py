@@ -20,14 +20,33 @@ Three constructors cover every index form in the repo:
 * :meth:`IndexStats.from_oracle` — the dict-form ``oracle.Index`` mirror,
   keeping the optimizer testable without jax.
 
+Since PR 5 the view also carries the *pair columns* of ``I_c2p`` (when
+the constructor has them), which unlock per-sequence **endpoint
+statistics** — distinct sources/targets and max out/in fanout — computed
+lazily per queried sequence and cached (:meth:`IndexStats.seq_endpoints`).
+These refine the optimizer's join cardinalities from the uniform
+``|A|·|B| / |V|`` guess to the classic distinct-value estimate with
+sound fanout upper bounds, which is what keeps skewed hub fanout from
+laddering the capacity retry schedule.
+
 This module is host-only: numpy, no jax import.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import numpy as np
+
+
+class SeqEndpoints(NamedTuple):
+    """Endpoint statistics of one sequence's pair set (all exact)."""
+
+    d_src: int  # distinct source endpoints
+    d_dst: int  # distinct target endpoints
+    max_out: int  # max pairs sharing one source (out-fanout)
+    max_in: int  # max pairs sharing one target (in-fanout)
 
 
 @dataclasses.dataclass
@@ -47,6 +66,17 @@ class IndexStats:
     l2c_cls: np.ndarray  # (l2c_count,) valid l2c class-column rows
     _pairs_cum: np.ndarray  # (l2c_count + 1,) prefix sum of row class sizes
     _cyc_cum: np.ndarray  # (l2c_count + 1,) same, cyclic classes only
+    # I_c2p, host-side: class CSR + pair columns sorted by (class, v, u).
+    # The columns are *lazy*: constructors pass a zero-arg fetch callable
+    # and nothing is pulled off device (or reassembled from shards) until
+    # the first seq_endpoints() call — a rebind that never prices a join
+    # stays a few-KB sync.  A view built with neither columns nor fetch
+    # degrades seq_endpoints() to None (the uniform assumption).
+    _class_starts: np.ndarray | None = None
+    _c2p_v: np.ndarray | None = None
+    _c2p_u: np.ndarray | None = None
+    _c2p_fetch: object = None  # () -> (c2p_v, c2p_u), resolved once
+    _endpoints: dict = dataclasses.field(default_factory=dict)
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -64,6 +94,9 @@ class IndexStats:
         l2c_cls: np.ndarray,
         l2c_count: int,
         class_cyclic: np.ndarray,
+        c2p_v: np.ndarray | None = None,
+        c2p_u: np.ndarray | None = None,
+        c2p_fetch=None,
     ) -> "IndexStats":
         starts = np.asarray(class_starts, np.int64)
         sizes = starts[1:] - starts[:-1]
@@ -82,6 +115,10 @@ class IndexStats:
             l2c_cls=rows,
             _pairs_cum=np.concatenate([zero, np.cumsum(row_sizes)]),
             _cyc_cum=np.concatenate([zero, np.cumsum(row_cyc)]),
+            _class_starts=starts,
+            _c2p_v=None if c2p_v is None else np.asarray(c2p_v, np.int64),
+            _c2p_u=None if c2p_u is None else np.asarray(c2p_u, np.int64),
+            _c2p_fetch=c2p_fetch,
         )
 
     @classmethod
@@ -98,6 +135,10 @@ class IndexStats:
             l2c_cls=np.asarray(a.l2c_cls),
             l2c_count=int(a.l2c_count),
             class_cyclic=np.asarray(a.class_cyclic),
+            # deferred: the pair columns are O(pair_cap), not "a few KB"
+            # — only a seq_endpoints() call (pricing a join) pays for
+            # the device pull, not every rebind
+            c2p_fetch=lambda: (np.asarray(a.c2p_v), np.asarray(a.c2p_u)),
         )
 
     @classmethod
@@ -118,6 +159,14 @@ class IndexStats:
             lo = len(flat)
             flat.extend(sorted(remap[c] for c in oindex.l2c[s] if c in remap))
             seq_ranges[s] = (lo, len(flat))
+        c2p = {c: list(oindex.c2p[c]) for c in ids}  # snapshot: the
+        # mirror may mutate after this view is taken
+
+        def fetch():
+            rows = [p for c in ids for p in c2p[c]]
+            return (np.array([p[0] for p in rows] or [0], np.int64),
+                    np.array([p[1] for p in rows] or [0], np.int64))
+
         return cls.from_host_arrays(
             n_vertices=n_vertices,
             n_classes=len(ids),
@@ -128,6 +177,7 @@ class IndexStats:
             l2c_cls=np.asarray(flat, np.int64),
             l2c_count=len(flat),
             class_cyclic=cyclic,
+            c2p_fetch=fetch,
         )
 
     # ------------------------------------------------------------------ #
@@ -153,3 +203,48 @@ class IndexStats:
         ``lookup(seq) ∩ id`` (classes are cycle-pure by construction)."""
         lo, hi = self.seq_ranges.get(tuple(seq), (0, 0))
         return int(self._cyc_cum[hi] - self._cyc_cum[lo])
+
+    def seq_endpoints(self, seq) -> SeqEndpoints | None:
+        """Exact endpoint statistics of the sequence's pair set — distinct
+        sources/targets and max out/in fanout — or None when this view was
+        built without the pair columns (the optimizer then falls back to
+        the uniform-endpoint assumption).
+
+        One vectorized gather over the sequence's class ranges in the
+        ``I_c2p`` pair columns (fetched off device on the FIRST call,
+        not at rebind), computed lazily per queried sequence and cached
+        for the life of this snapshot (a rebind rebuilds the view, so
+        the cache can never serve stale statistics).  Classes partition
+        the pair space, so the gather is a disjoint union and the
+        distinct counts over it are exact."""
+        if self._c2p_v is None:
+            if self._c2p_fetch is None:
+                return None
+            v, u = self._c2p_fetch()
+            self._c2p_v = np.asarray(v, np.int64)
+            self._c2p_u = np.asarray(u, np.int64)
+            self._c2p_fetch = None
+        seq = tuple(seq)
+        hit = self._endpoints.get(seq)
+        if hit is not None:
+            return hit
+        lo, hi = self.seq_ranges.get(seq, (0, 0))
+        cls = self.l2c_cls[lo:hi]
+        cls = cls[cls < self.class_sizes.shape[0]]
+        if cls.size == 0:
+            res = SeqEndpoints(0, 0, 0, 0)
+        else:
+            s_, e_ = self._class_starts[cls], self._class_starts[cls + 1]
+            lens = e_ - s_
+            offs = np.concatenate(
+                [np.zeros(1, np.int64), np.cumsum(lens)[:-1]])
+            idx = np.repeat(s_ - offs, lens) + np.arange(int(lens.sum()))
+            vs, us = self._c2p_v[idx], self._c2p_u[idx]
+            _, out_cnt = np.unique(vs, return_counts=True)
+            _, in_cnt = np.unique(us, return_counts=True)
+            res = SeqEndpoints(
+                d_src=int(out_cnt.shape[0]), d_dst=int(in_cnt.shape[0]),
+                max_out=int(out_cnt.max(initial=0)),
+                max_in=int(in_cnt.max(initial=0)))
+        self._endpoints[seq] = res
+        return res

@@ -145,6 +145,42 @@ def skewed_labeled_graph(n_vertices: int = 160, n_labels: int = 6,
     return LabeledGraph.from_edges(n_vertices, n_labels, edges)
 
 
+def drifting_workload(g: LabeledGraph, phases, n_per_phase: int,
+                      hot_fraction: float = 0.85, seed: int = 0):
+    """A phased query stream whose hot set *drifts* — the adaptive
+    iaCPQx benchmark workload (and the regime adaptive indexing exists
+    for: traffic concentrates on a few templates, then moves).
+
+    ``phases`` is a list of phases, each a list of ``(template_name,
+    labels)`` hot templates.  Every phase yields ``n_per_phase`` queries:
+    a ``hot_fraction`` share drawn uniformly from the phase's hot
+    templates (the repetition IS the signal a workload sketch must
+    catch) and the rest background noise — random Fig. 5 templates over
+    labels present in the graph, so the miner has to *reject* plausible
+    but cold sequences, not just rank the only thing it ever saw.
+
+    Returns a list of per-phase query lists (deterministic in ``seed``).
+    """
+    from repro.core.query import TEMPLATE_ARITY, instantiate_template
+
+    rng = np.random.default_rng(seed)
+    present = np.unique(g.lbl)
+    names = sorted(TEMPLATE_ARITY)
+    out = []
+    for hot in phases:
+        qs = []
+        for _ in range(n_per_phase):
+            if rng.random() < hot_fraction:
+                name, labels = hot[int(rng.integers(0, len(hot)))]
+                qs.append(instantiate_template(name, list(labels)))
+            else:
+                name = names[int(rng.integers(0, len(names)))]
+                labels = rng.choice(present, TEMPLATE_ARITY[name]).tolist()
+                qs.append(instantiate_template(name, labels))
+        out.append(qs)
+    return out
+
+
 def random_queries_for_graph(g: LabeledGraph, template_names, n_per: int,
                              seed: int = 0):
     """The paper's query workload: per template, n queries with random

@@ -71,7 +71,8 @@ class TestIndexStats:
 
     def test_oracle_and_device_views_agree(self):
         """IndexStats.from_index (device arrays) == from_oracle (dict
-        mirror) on every invariant the optimizer consumes."""
+        mirror) on every invariant the optimizer consumes — the PR 5
+        endpoint statistics included."""
         from repro.core import index as cindex
 
         g = random_graph(31, n_max=14, m_max=40)
@@ -85,11 +86,30 @@ class TestIndexStats:
             assert dev.seq_classes(s) == host.seq_classes(s), s
             assert dev.seq_pairs(s) == host.seq_pairs(s), s
             assert dev.seq_cyclic_pairs(s) == host.seq_cyclic_pairs(s), s
+            assert dev.seq_endpoints(s) == host.seq_endpoints(s), s
+
+    def test_endpoint_stats_are_exact(self, skewed):
+        """seq_endpoints recomputes exactly from the oracle dicts:
+        distinct sources/targets and max out/in fanout over the union of
+        the sequence's class pair lists."""
+        _, oidx, stats = skewed
+        for s, classes in oidx.l2c.items():
+            pairs = [p for c in classes for p in oidx.c2p[c]]
+            srcs = [p[0] for p in pairs]
+            dsts = [p[1] for p in pairs]
+            ep = stats.seq_endpoints(s)
+            assert ep.d_src == len(set(srcs)), s
+            assert ep.d_dst == len(set(dsts)), s
+            assert ep.max_out == max(srcs.count(v) for v in set(srcs)), s
+            assert ep.max_in == max(dsts.count(v) for v in set(dsts)), s
+        assert stats.seq_endpoints((5, 5)) == (0, 0, 0, 0)  # unindexed
 
     def test_sharded_stats_match_local(self):
         """replicated_stats rebuilds the local statistics from a sharded
-        layout's replicated leaves alone — sharded planning can never
-        drift from local planning."""
+        layout alone — sharded planning can never drift from local
+        planning (endpoint statistics need the sharded pair columns, but
+        classes live whole on one shard, so the reassembled view is
+        statistic-identical)."""
         from repro.core import index as cindex
         from repro.core.sharded_index import replicated_stats, shard_index
 
@@ -104,6 +124,7 @@ class TestIndexStats:
             assert rep.seq_pairs(s) == local.seq_pairs(s), s
             assert rep.seq_classes(s) == local.seq_classes(s), s
             assert rep.seq_cyclic_pairs(s) == local.seq_cyclic_pairs(s), s
+            assert rep.seq_endpoints(s) == local.seq_endpoints(s), s
 
 
 # ---------------------------------------------------------------------- #
@@ -214,10 +235,13 @@ class TestGoldenPlans:
          ("conj", ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)])),
           ("conj", ("lookup", [(0, 0)]), ("lookup", [(1,)]))),
          ("conj", ("lookup", [(1,)]), ("lookup", [(0, 0)]))),
-        # chain: greedy (1,0)+(2,3) loses to the rare-leaf split
+        # chain: greedy (1,0)+(2,3) loses to the rare-leaf split; since
+        # the endpoint statistics (PR 5) the witness-aware estimates
+        # also flip the DP to the left-deep association, which fuses
+        # into one multi-segment LOOKUP
         ("C4", [1, 0, 2, 3],
          ("lookup", [(1, 0), (2, 3)]),
-         ("join", ("lookup", [(1,)]), ("lookup", [(0, 2), (3,)]))),
+         ("lookup", [(1,), (0, 2), (3,)])),
         ("C2i", [0, 1],
          ("conj_id", ("lookup", [(0, 1)])),
          ("conj_id", ("lookup", [(0, 1)]))),

@@ -1,0 +1,513 @@
+"""Workload subsystem (PR 5): sequence harvesting, the Space-Saving
+sketch's bounds and eviction, benefit-model pricing, the adaptation
+controller's hysteresis/budget/dwell rules, and the end-to-end property
+that NO interleaving of queries, graph updates and adaptation rounds
+can ever change answers — adaptive serving == a never-adapted full
+index == the numpy oracle, locally and sharded."""
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import index as cindex
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import instantiate_template, parse
+from repro.core.service import QueryService
+from repro.core.stats import IndexStats
+from repro.core.workload import (
+    AdaptationConfig,
+    AdaptationController,
+    BenefitModel,
+    WorkloadSketch,
+    harvest_sequences,
+)
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in arr.tolist()}
+
+
+# ---------------------------------------------------------------------- #
+# harvesting
+# ---------------------------------------------------------------------- #
+
+
+class TestHarvest:
+    def test_chain_windows(self):
+        q = parse("l0 . l1 . l2", None, 6)
+        assert sorted(harvest_sequences(q, 2)) == [(0, 1), (1, 2)]
+        assert sorted(harvest_sequences(q, 3)) == [
+            (0, 1), (0, 1, 2), (1, 2)]
+
+    def test_conj_operands_recurse_and_singletons_are_silent(self):
+        q = instantiate_template("T", [0, 0, 1])  # (l0.l0) & l1
+        assert harvest_sequences(q, 2) == [(0, 0)]
+        q = instantiate_template("St", [0, 4, 5])  # three singletons
+        assert harvest_sequences(q, 2) == []
+
+    def test_identity_breaks_runs(self):
+        q = parse("l0 . id . l1", None, 6)
+        # q ∘ id == q, but the harvest is syntactic: id splits the run
+        # conservatively (the planner strips it; both windows of the
+        # stripped chain still get their votes from other traffic)
+        assert (0, 1) not in harvest_sequences(q, 2)
+
+    def test_nested_join_subplans(self):
+        q = instantiate_template("TC", [0, 0, 1, 2, 3])  # ((l0.l0)&l1).l2.l3
+        assert sorted(harvest_sequences(q, 2)) == [(0, 0), (2, 3)]
+
+
+# ---------------------------------------------------------------------- #
+# the sketch
+# ---------------------------------------------------------------------- #
+
+
+class TestWorkloadSketch:
+    def test_exact_below_capacity(self):
+        sk = WorkloadSketch(8)
+        for _ in range(5):
+            sk.observe("a")
+        sk.observe("b")
+        assert sk.count("a") == 5 and sk.guaranteed("a") == 5
+        assert sk.count("b") == 1 and sk.count("c") == 0
+
+    def test_eviction_inherits_min_and_records_error(self):
+        sk = WorkloadSketch(2)
+        sk.observe("a", 5)
+        sk.observe("b", 2)
+        sk.observe("c")  # evicts b (the min), inherits its count
+        assert set(sk.counts) == {"a", "c"}
+        assert sk.count("c") == 3  # 2 (inherited) + 1
+        assert sk.guaranteed("c") == 1  # error records the inheritance
+        assert sk.guaranteed("a") == 5
+
+    def test_heavy_hitter_guarantee(self):
+        """Space-Saving: any item with true count > N/capacity is
+        monitored, whatever the adversarial order."""
+        rng = np.random.default_rng(0)
+        stream = ["hot"] * 40 + [f"cold{i}" for i in range(60)]
+        rng.shuffle(stream)
+        sk = WorkloadSketch(16)
+        for x in stream:
+            sk.observe(x)
+        assert sk.count("hot") >= 40  # count is an upper bound
+        assert "hot" in dict((i, c) for i, c, _ in sk.heavy_hitters())
+
+    def test_capacity_is_bounded(self):
+        sk = WorkloadSketch(4)
+        for i in range(100):
+            sk.observe(i)
+        assert len(sk) == 4
+
+    def test_decay_fades_and_drops(self):
+        sk = WorkloadSketch(8)
+        sk.observe("a", 8)
+        sk.observe("b", 1)
+        sk.decay(0.4)
+        assert sk.count("a") == pytest.approx(3.2)
+        assert sk.count("b") == 0  # faded below the drop floor
+        assert len(sk) == 1
+
+    def test_deterministic_order(self):
+        sk = WorkloadSketch(8)
+        for x in ["b", "a", "c"]:
+            sk.observe(x, 2)
+        assert [i for i, _, _ in sk.heavy_hitters()] == ["a", "b", "c"]
+
+
+# ---------------------------------------------------------------------- #
+# benefit model
+# ---------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def skewed_stats():
+    from repro.data.graphs import skewed_labeled_graph
+
+    g = skewed_labeled_graph(n_vertices=40, wave=12, rare_edges=10, seed=7)
+    oidx = oracle.build_index(g, 2)
+    return g, IndexStats.from_oracle(oidx, g.n_vertices)
+
+
+class TestBenefitModel:
+    def test_hub_sequence_saves_most(self, skewed_stats):
+        """Indexing the hub 2-sequence avoids the hub x hub expansion
+        join — its saving must dwarf a rare x rare sequence's."""
+        _, stats = skewed_stats
+        m = BenefitModel(stats)
+        assert m.saved((0, 0)) > 10 * m.saved((2, 3))
+        assert m.saved((0, 0)) > 0
+
+    def test_benefit_scales_with_frequency(self, skewed_stats):
+        _, stats = skewed_stats
+        m = BenefitModel(stats)
+        assert m.benefit((0, 0), 10) == 10 * m.saved((0, 0))
+        assert m.benefit((0, 0), 0) == 0
+
+    def test_absent_label_sequence_prices_to_zero(self, skewed_stats):
+        """A sequence over a label with no pairs can never materialize
+        anything — nothing to save, nothing to spend."""
+        g, stats = skewed_stats
+        dead = g.alphabet_size  # out-of-alphabet id: seq_pairs == 0
+        m = BenefitModel(stats)
+        assert m.saved((dead, dead)) == 0.0
+        assert m.est_pairs((dead, dead)) == 0.0
+
+    def test_indexed_pairs_are_exact(self, skewed_stats):
+        _, stats = skewed_stats
+        m = BenefitModel(stats)
+        assert m.est_pairs((0, 0)) == stats.seq_pairs((0, 0))
+
+
+# ---------------------------------------------------------------------- #
+# controller: hysteresis, dwell, budget
+# ---------------------------------------------------------------------- #
+
+
+class TestAdaptationController:
+    def _controller(self, **kw):
+        defaults = dict(budget=1, min_count=2.0, min_benefit=1.0,
+                        swap_margin=2.0, dwell=1, decay=1.0)
+        defaults.update(kw)
+        return AdaptationController(2, config=AdaptationConfig(**defaults))
+
+    def test_mines_the_hot_sequence(self, skewed_stats):
+        _, stats = skewed_stats
+        c = self._controller()
+        q = instantiate_template("T", [0, 0, 1])
+        for _ in range(5):
+            c.observe(q)
+        ops = c.propose(stats, frozenset())
+        assert ops == [("insert_interest", (0, 0))]
+
+    def test_below_min_count_is_ignored(self, skewed_stats):
+        _, stats = skewed_stats
+        c = self._controller(min_count=10.0)
+        for _ in range(5):
+            c.observe(instantiate_template("T", [0, 0, 1]))
+        assert c.propose(stats, frozenset()) == []
+
+    def test_hysteresis_resident_defends_slot(self, skewed_stats):
+        """A challenger with merely-equal benefit must NOT evict the
+        resident — only a swap_margin-factor winner may."""
+        _, stats = skewed_stats
+        c = self._controller(dwell=0)
+        q_res = instantiate_template("S", [0, 0, 2, 3])  # votes (0,0),(2,3)
+        for _ in range(8):
+            c.observe(q_res)
+        ops = c.propose(stats, frozenset())
+        assert ("insert_interest", (0, 0)) in ops
+        # same traffic again: (0,0) resident, (2,3) equally hot but far
+        # lower benefit — no churn
+        for _ in range(8):
+            c.observe(q_res)
+        assert c.propose(stats, frozenset({(0, 0)})) == []
+
+    def test_eviction_after_drift(self, skewed_stats):
+        """When traffic drifts, decay + margin eventually hand the slot
+        to the new hot sequence — and the swap arrives as one coalesced
+        delete+insert batch."""
+        _, stats = skewed_stats
+        c = self._controller(decay=0.25, dwell=0)
+        hot1 = instantiate_template("T", [0, 0, 1])
+        for _ in range(6):
+            c.observe(hot1)
+        assert c.propose(stats, frozenset()) == [
+            ("insert_interest", (0, 0))]
+        hot2 = instantiate_template("S", [2, 3, 1, 1])  # votes (2,3),(1,1)
+        for rnd in range(6):
+            for _ in range(8):
+                c.observe(hot2)
+            ops = c.propose(stats, frozenset({(0, 0)}))
+            if ops:
+                assert ("delete_interest", (0, 0)) in ops
+                assert any(op[0] == "insert_interest" for op in ops)
+                return
+        pytest.fail("drifted workload never captured the slot")
+
+    def test_dwell_protects_fresh_admissions(self, skewed_stats):
+        """Right after admission a resident cannot be evicted, even by a
+        margin-clearing challenger."""
+        _, stats = skewed_stats
+        c = self._controller(dwell=5, decay=1.0)
+        for _ in range(4):
+            c.observe(instantiate_template("S", [2, 3, 1, 1]))
+        ops = c.propose(stats, frozenset())
+        inserts = [op for op in ops if op[0] == "insert_interest"]
+        assert inserts
+        admitted = inserts[0][1]
+        # now a far hotter, far more beneficial challenger shows up
+        for _ in range(50):
+            c.observe(instantiate_template("T", [0, 0, 1]))
+        ops = c.propose(stats, frozenset({admitted}))
+        assert ("delete_interest", admitted) not in ops
+
+    def test_budget_is_respected(self, skewed_stats):
+        _, stats = skewed_stats
+        c = self._controller(budget=2, dwell=0)
+        for labels in ([0, 0, 1], [6, 6, 7]):
+            for _ in range(6):
+                c.observe(instantiate_template("T", labels))
+        for _ in range(6):
+            c.observe(instantiate_template("S", [2, 3, 1, 1]))
+        ops = c.propose(stats, frozenset())
+        inserts = [op for op in ops if op[0] == "insert_interest"]
+        assert len(inserts) == 2  # three candidates, two slots
+
+    def test_pair_budget_skips_oversized(self, skewed_stats):
+        _, stats = skewed_stats
+        c = self._controller(budget=4, dwell=0, pair_budget=10.0)
+        for _ in range(6):
+            c.observe(instantiate_template("T", [0, 0, 1]))  # huge seq
+        ops = c.propose(stats, frozenset())
+        assert ops == []  # (0,0)'s footprint alone blows the budget
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: adaptation can never change answers
+# ---------------------------------------------------------------------- #
+
+
+def _adaptive_service(g, mesh=None, **cfg):
+    mi = MaintainableIndex.build(g, 2, interests=[])
+    defaults = dict(budget=3, min_count=2.0, dwell=1, decay=0.5)
+    defaults.update(cfg)
+    adapter = AdaptationController(2, config=AdaptationConfig(**defaults))
+    engine = (Engine(mi.flush()) if mesh is None
+              else Engine(mi.flush(), mesh=mesh))
+    return QueryService(engine, maintainer=mi, adapter=adapter,
+                        adapt_interval=5, max_batch=8), mi
+
+
+def _query_pool(g, rng, n=8):
+    names = ["C2", "T", "S", "C4", "C2i", "St"]
+    from repro.core.query import TEMPLATE_ARITY
+
+    present = np.unique(g.lbl)
+    out = []
+    for i in range(n):
+        name = names[i % len(names)]
+        labels = rng.choice(present, TEMPLATE_ARITY[name]).tolist()
+        out.append(instantiate_template(name, labels))
+    return out
+
+
+def _random_graph_ops(g, rng, n=2):
+    base = g._base_edges()
+    ops = []
+    for _ in range(n):
+        if rng.random() < 0.5 or base.shape[0] == 0:
+            ops.append(("insert_edge", int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_vertices)),
+                        int(rng.integers(0, g.n_labels))))
+        else:
+            e = base[int(rng.integers(0, base.shape[0]))]
+            ops.append(("delete_edge", int(e[0]), int(e[1]), int(e[2])))
+    return ops
+
+
+class TestAdaptiveEndToEnd:
+    def test_interleaved_queries_updates_adaptation(self):
+        """Queries, graph updates and forced adaptation rounds in one
+        stream: every answer equals the oracle on the current graph (==
+        a never-adapted full index by the oracle's own equivalence)."""
+        g = random_graph(41, n_max=12, m_max=26)
+        svc, mi = _adaptive_service(g)
+        rng = np.random.default_rng(41)
+        for step in range(4):
+            pool = _query_pool(mi.g, rng)
+            for q in pool:
+                assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+            if step % 2 == 0:
+                svc.apply_updates(_random_graph_ops(mi.g, rng))
+            svc.adapt()
+        svc.flush()
+        # the loop actually adapted (non-vacuous test)
+        assert svc.stats.adapt_rounds >= 4
+        for q in _query_pool(mi.g, rng):
+            assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+
+    def test_adaptation_matches_never_adapted_full_index(self):
+        """The tentpole invariant, verbatim: an adapted service and a
+        full-CPQx engine rebuilt on the same graph agree on every
+        probe at every step."""
+        g = random_graph(43, n_max=11, m_max=24)
+        svc, mi = _adaptive_service(g)
+        rng = np.random.default_rng(43)
+        for step in range(3):
+            svc.apply_updates(_random_graph_ops(mi.g, rng, n=2))
+            pool = _query_pool(mi.g, rng, n=6)
+            for q in pool:
+                svc.query(q)  # traffic the adaptation round prices
+            svc.adapt()
+            svc.flush()
+            full = Engine(cindex.build(mi.g, 2))
+            for q in pool:
+                assert (_rows(svc.query(q)) == _rows(full.execute(q))
+                        == oracle.cpq_eval(mi.g, q)), q
+
+    def test_sharded_adaptive_service(self):
+        """The same loop off a sharded backend: adaptation flushes
+        reshard at rebind and answers stay oracle-identical."""
+        import jax
+
+        from repro import compat
+
+        mesh = compat.make_mesh((max(1, jax.device_count()),), ("engine",))
+        g = random_graph(47, n_max=10, m_max=22)
+        svc, mi = _adaptive_service(g, mesh=mesh)
+        rng = np.random.default_rng(47)
+        for step in range(3):
+            for q in _query_pool(mi.g, rng, n=5):
+                assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+            svc.apply_updates(_random_graph_ops(mi.g, rng, n=1))
+            svc.adapt()
+        svc.flush()
+        assert svc.stats.adapt_rounds >= 3
+        for q in _query_pool(mi.g, rng, n=5):
+            assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+
+    def test_property_interleavings(self):
+        """Hypothesis: arbitrary interleavings of queries, graph
+        updates, interest writes and adaptation rounds leave every
+        answer equal to the oracle (and hence to a never-adapted full
+        index) on the live graph."""
+        hypothesis = pytest.importorskip("hypothesis")
+        given, settings, st = (hypothesis.given, hypothesis.settings,
+                               hypothesis.strategies)
+
+        @settings(max_examples=10, deadline=None)
+        @given(seed=st.integers(0, 10_000),
+               script=st.lists(st.sampled_from(["q", "u", "a", "i"]),
+                               min_size=4, max_size=10))
+        def run(seed, script):
+            g = random_graph(seed % 89, n_max=10, m_max=20)
+            svc, mi = _adaptive_service(g)
+            rng = np.random.default_rng(seed)
+            for action in script:
+                if action == "q":
+                    for q in _query_pool(mi.g, rng, n=3):
+                        assert _rows(svc.query(q)) == \
+                            oracle.cpq_eval(mi.g, q), (action, q)
+                elif action == "u":
+                    svc.apply_updates(_random_graph_ops(mi.g, rng, n=1))
+                elif action == "a":
+                    svc.adapt()
+                else:  # a manual interest write, coalesced like any other
+                    l1 = int(rng.integers(0, mi.g.alphabet_size))
+                    l2 = int(rng.integers(0, mi.g.alphabet_size))
+                    if rng.random() < 0.5:
+                        svc.insert_interest((l1, l2))
+                    else:
+                        svc.delete_interest((l1, l2))
+            svc.flush()
+            for q in _query_pool(mi.g, rng, n=3):
+                assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q), q
+
+        run()
+
+
+class TestVoteAccounting:
+    def test_folded_duplicates_and_cache_hits_still_vote(self):
+        """N submissions of one hot template must credit ~N votes, not
+        1: in-flight duplicates fold into one execution and repeats are
+        served from the result cache, but both ARE workload — the
+        sketch must see the true frequency or it starves exactly when a
+        sequence is hottest."""
+        g = random_graph(53, n_max=10, m_max=22)
+        svc, mi = _adaptive_service(g)
+        svc.adapt_interval = 10_000  # isolate vote accounting
+        q = instantiate_template("T", [0, 0, 1])  # votes (0, 0)
+        for _ in range(6):  # fold into ONE execution at flush
+            svc.submit(q)
+        svc.flush()
+        assert svc.adapter.sketch.count((0, 0)) == 6
+        for _ in range(4):  # served from the result cache
+            svc.submit(q)
+        assert svc.adapter.sketch.count((0, 0)) == 10
+
+
+class TestServiceInterestCoalescing:
+    def test_interest_and_graph_updates_share_one_flush(self, ex_graph):
+        """The satellite fix, verbatim: interest writes issued through
+        the service coalesce with queued graph updates into ONE
+        maintenance round (one update_batch, one rebind) instead of
+        forcing their own."""
+        mi = MaintainableIndex.build(ex_graph, 2, interests=[])
+        svc = QueryService(Engine(mi.flush()), maintainer=mi, max_batch=16)
+        q = instantiate_template("C2", [0, 0])
+        before = _rows(svc.query(q))
+
+        svc.apply_updates([("insert_edge", 2, 3, 0)])
+        svc.insert_interest((0, 0))
+        svc.apply_updates([("delete_edge", 0, 1, 0)])
+        assert svc.pending_updates == 3  # still queued, nothing flushed
+        assert svc.stats.update_batches == 0
+
+        got = _rows(svc.query(q))
+        assert svc.stats.update_batches == 1  # ONE coalesced round
+        assert svc.stats.updates_applied == 3
+        assert svc.stats.interests_inserted == 1
+        assert (0, 0) in mi.index.interests
+        assert got == oracle.cpq_eval(mi.g, q) != before
+
+    def test_interest_delete_coalesces_too(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2, interests=[(0, 0)])
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        q = instantiate_template("C2", [0, 0])
+        svc.delete_interest((0, 0))
+        assert svc.pending_updates == 1
+        assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q)
+        assert (0, 0) not in mi.index.interests
+        assert svc.stats.interests_deleted == 1
+
+    def test_interest_ops_rejected_without_interest_aware_maintainer(
+            self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2)  # full CPQx
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        with pytest.raises(ValueError, match="interest-aware"):
+            svc.insert_interest((0, 0))
+        assert svc.pending_updates == 0
+
+    def test_invalid_interest_rejected_at_enqueue(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2, interests=[])
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        with pytest.raises(ValueError, match="length"):
+            svc.insert_interest((0, 0, 0))  # k == 2
+        with pytest.raises(ValueError, match="alphabet"):
+            svc.insert_interest((0, 99))
+        assert svc.pending_updates == 0
+
+    def test_adapter_requires_interest_aware_maintainer(self, ex_graph):
+        mi = MaintainableIndex.build(ex_graph, 2)
+        with pytest.raises(ValueError, match="interest-aware"):
+            QueryService(Engine(mi.flush()), maintainer=mi,
+                         adapter=AdaptationController(2))
+
+    def test_adapter_k_must_fit_the_index(self, ex_graph):
+        """An adapter harvesting windows longer than the index's k would
+        propose uninsertable interests — rejected at construction."""
+        mi = MaintainableIndex.build(ex_graph, 2, interests=[])
+        with pytest.raises(ValueError, match="k=3"):
+            QueryService(Engine(mi.flush()), maintainer=mi,
+                         adapter=AdaptationController(3))
+
+    def test_adapt_drops_invalid_proposals(self, ex_graph):
+        """A proposal the mirror would reject is dropped at adapt time,
+        never queued — one bad op must not poison every later coalesced
+        round (the queue invariant, applied to the controller too)."""
+        mi = MaintainableIndex.build(ex_graph, 2, interests=[])
+        svc = QueryService(Engine(mi.flush()), maintainer=mi,
+                           adapter=AdaptationController(2))
+        svc.adapter.propose = lambda stats, cur: [
+            ("insert_interest", (0, 0, 0)),  # len 3 > k
+            ("insert_interest", (0, 99)),  # label outside the alphabet
+            ("insert_interest", (0, 0)),  # valid
+        ]
+        assert svc.adapt() == [("insert_interest", (0, 0))]
+        q = instantiate_template("C2", [0, 0])
+        assert _rows(svc.query(q)) == oracle.cpq_eval(mi.g, q)  # drains
+        assert (0, 0) in mi.index.interests
+        assert svc.pending_updates == 0  # nothing stuck, nothing poisoned
