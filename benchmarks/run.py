@@ -27,6 +27,7 @@ BENCHES = {
     "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp reference
     "throughput": "benchmarks.bench_throughput",  # serving qps (PR 1)
     "adaptive": "benchmarks.bench_adaptive",  # drifting-workload mining (PR 5)
+    "recovery": "benchmarks.bench_recovery",  # kill-and-recover TTFCA (PR 6)
 }
 
 

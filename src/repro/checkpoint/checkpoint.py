@@ -12,8 +12,16 @@ Layout::
 Guarantees:
   * atomic commit: data written to ``step_X.tmp`` then renamed, LATEST
     updated last — a crash mid-write can never corrupt a committed step;
+  * durable commit: every leaf file, the manifest, and the directory
+    entries are fsync'd before the rename, and the rename itself is made
+    durable before LATEST moves — the pointer can never lead a committed
+    step to disk;
   * async: writes happen on a daemon thread; ``wait_for_writes`` joins
-    (the train loop calls it before exit);
+    (registered via atexit so interpreter exit can't drop a write);
+  * crash-tolerant discovery: ``latest_step`` treats LATEST as the
+    commit point when it is readable and points at a real manifest, and
+    otherwise falls back to scanning ``step_*`` dirs — uncommitted
+    ``.tmp`` dirs and torn pointers are skipped, never trusted;
   * elastic restore: leaves are loaded on host and ``jax.device_put`` to
     ANY target sharding — restarting on a different mesh shape (scale up
     or down) just works; no resharding pass needed.
@@ -21,8 +29,10 @@ Guarantees:
 
 from __future__ import annotations
 
+import atexit
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Optional
@@ -39,6 +49,30 @@ def _flatten_with_paths(tree):
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
+
+
+# str(DictKey('x')) renders as "['x']"; strip the decoration so flat-dict
+# checkpoints can be read back by plain key without a like-tree.
+_DICTKEY_RE = re.compile(r"^\['(.*)'\]$")
+
+
+def _norm_key(path: str) -> str:
+    m = _DICTKEY_RE.match(path)
+    return m.group(1) if m else path
+
+
+def _fsync_file(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    """Make directory entries (new files, renames) durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 # numpy can't round-trip ml_dtypes (bfloat16, fp8) through npy files —
@@ -62,33 +96,54 @@ def _from_native(arr: np.ndarray, dtype_name: str) -> np.ndarray:
     return arr.astype(dtype_name)
 
 
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:09d}")
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
-                    async_write: bool = False) -> str:
-    """Write one checkpoint; returns the committed directory path."""
+                    async_write: bool = False,
+                    extra: Optional[dict] = None) -> str:
+    """Write one checkpoint; returns the committed directory path.
+
+    ``extra`` is an optional JSON-serializable dict stored verbatim in
+    the manifest — for small non-array metadata (strings, version tags)
+    that has no business being an npy leaf.
+    """
     paths, leaves, _ = _flatten_with_paths(tree)
     host_leaves = [np.asarray(l) for l in leaves]
 
     def _write():
-        final = os.path.join(ckpt_dir, f"step_{step:09d}")
+        final = _step_dir(ckpt_dir, step)
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        if os.path.exists(tmp):  # stale debris from a crashed writer
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         manifest = {"step": step, "leaves": []}
+        if extra is not None:
+            manifest["extra"] = extra
         for i, (p, arr) in enumerate(zip(paths, host_leaves)):
             fname = f"leaf_{i:05d}.npy"
             raw, dtype_name = _to_native(arr)
-            np.save(os.path.join(tmp, fname), raw)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, raw)
+                _fsync_file(f)
             manifest["leaves"].append(
                 {"path": p, "file": fname, "shape": list(arr.shape),
                  "dtype": dtype_name})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            _fsync_file(f)
+        _fsync_dir(tmp)  # directory entries durable before the rename
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic commit
+        _fsync_dir(ckpt_dir)  # the rename itself durable before LATEST
         latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
         with open(latest_tmp, "w") as f:
             f.write(str(step))
+            _fsync_file(f)
         os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+        _fsync_dir(ckpt_dir)
         return final
 
     if async_write:
@@ -96,7 +151,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
         with _LOCK:
             _PENDING.append(t)
         t.start()
-        return os.path.join(ckpt_dir, f"step_{step:09d}")
+        return _step_dir(ckpt_dir, step)
     return _write()
 
 
@@ -108,18 +163,57 @@ def wait_for_writes():
         t.join()
 
 
+# a daemon writer thread dies with the interpreter mid-write; joining at
+# exit turns "usually committed" into "committed".
+atexit.register(wait_for_writes)
+
+
+def committed_steps(ckpt_dir: str) -> list[int]:
+    """All fully-renamed steps on disk, ascending.  A step counts only if
+    its directory survived the atomic rename (no ``.tmp`` suffix) AND its
+    manifest exists — a partially-copied dir is not a checkpoint."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        try:
+            s = int(name[len("step_"):])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(s)
+    return sorted(steps)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest committed step, or None.
+
+    LATEST is the commit point when it is intact: readable, an int, and
+    pointing at a directory with a manifest.  A torn or dangling pointer
+    (crash between data rename and pointer replace, or a partial pointer
+    write on a filesystem without atomic replace) falls back to scanning
+    the committed ``step_*`` dirs — never crashes, never returns an
+    uncommitted ``.tmp``."""
     p = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return int(f.read().strip())
+    if os.path.exists(p):
+        try:
+            with open(p) as f:
+                s = int(f.read().strip())
+        except (OSError, ValueError):
+            s = None
+        if s is not None and os.path.exists(
+                os.path.join(_step_dir(ckpt_dir, s), "manifest.json")):
+            return s
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
     """Load into the structure of ``like`` (host numpy leaves)."""
     wait_for_writes()
-    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    d = _step_dir(ckpt_dir, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     paths, leaves, treedef = _flatten_with_paths(like)
@@ -135,6 +229,31 @@ def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
         out.append(arr.astype(leaf.dtype) if str(arr.dtype) != str(leaf.dtype)
                    else arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_checkpoint_items(
+        ckpt_dir: str, step: Optional[int] = None,
+) -> tuple[dict, Optional[dict], int]:
+    """Dynamic loader: ``(items, extra, step)`` with no like-tree.
+
+    ``items`` maps normalized leaf paths (dict-key decoration stripped)
+    to host numpy arrays at their *checkpointed* shapes — the reader
+    decides what to do with them.  This is what a fresh process uses: it
+    has no live tree whose capacities match the checkpoint's."""
+    wait_for_writes()
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {ckpt_dir!r}")
+    d = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    items = {}
+    for e in manifest["leaves"]:
+        arr = _from_native(np.load(os.path.join(d, e["file"])), e["dtype"])
+        items[_norm_key(e["path"])] = arr
+    return items, manifest.get("extra"), step
 
 
 def restore_sharded(ckpt_dir: str, step: int, like: Any,

@@ -158,6 +158,42 @@ class FlushCaps:
         return self if out == self else out
 
 
+# ---------------------------------------------------------------------- #
+# checkpoint codec — caps travel inside index snapshots as one small int
+# vector (strings/dataclasses can't be npy leaves).  Tag word selects the
+# kind; capacities only ever hold small non-negative ints, so -1 is free
+# to mean "no caps recorded".
+# ---------------------------------------------------------------------- #
+def encode_caps(caps) -> np.ndarray:
+    """``FlushCaps``/``BuildCaps``/``None`` -> int64 vector."""
+    if caps is None:
+        return np.array([-1], dtype=np.int64)
+    if isinstance(caps, FlushCaps):
+        return np.array([0, caps.pair_cap, caps.l2c_cap, caps.seq_cap],
+                        dtype=np.int64)
+    if isinstance(caps, BuildCaps):
+        return np.array(
+            [1, caps.pair_cap, caps.union_pair_cap, caps.seq_rows,
+             caps.l2c_rows, caps.n_seqs, *caps.level_rows], dtype=np.int64)
+    raise TypeError(f"cannot encode caps of type {type(caps).__name__}")
+
+
+def decode_caps(arr):
+    """Inverse of :func:`encode_caps`."""
+    a = np.asarray(arr, dtype=np.int64).ravel()
+    tag = int(a[0])
+    if tag == -1:
+        return None
+    if tag == 0:
+        return FlushCaps(int(a[1]), int(a[2]), int(a[3]))
+    if tag == 1:
+        return BuildCaps(
+            level_rows=tuple(int(x) for x in a[6:]),
+            pair_cap=int(a[1]), union_pair_cap=int(a[2]),
+            seq_rows=int(a[3]), l2c_rows=int(a[4]), n_seqs=int(a[5]))
+    raise ValueError(f"unknown caps tag {tag}")
+
+
 def graph_stats(g: LabeledGraph, k: int) -> dict:
     """|P^{<=k}|, gamma (avg distinct seqs per pair), degree stats —
     the quantities of paper Sec. III-A / Table IV."""

@@ -397,6 +397,27 @@ class ShardedBackend(B.ExecutionBackend):
         return cls(shard_index(index, n_shards), mesh, index.n_vertices,
                    axis=axis, k=index.k)
 
+    # ---------------------- lifecycle (checkpoint) --------------------- #
+
+    def save(self, ckpt_dir: str, step: int = 0) -> str:
+        """Snapshot the per-shard leaves + layout metadata as one atomic
+        committed step (see :mod:`repro.core.lifecycle`)."""
+        from .lifecycle import save_sharded  # lazy: one-way dependency
+
+        return save_sharded(self.sharded, self.n_vertices, self.k,
+                            ckpt_dir, step)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, mesh, step: int | None = None,
+                axis: str = "engine") -> "ShardedBackend":
+        """Rebuild a live backend on ``mesh`` from a saved step.  If the
+        mesh axis size differs from the saved shard count the leaves are
+        resharded (``gather_index`` -> ``shard_index``) — elastic
+        restore at any scale."""
+        from .lifecycle import restore_sharded_backend
+
+        return restore_sharded_backend(ckpt_dir, mesh, step, axis=axis)
+
     def reshard(self, index) -> None:
         """Re-shard a flushed/rebuilt index *into this backend* so the
         compiled executables survive a maintenance rebind: the cached

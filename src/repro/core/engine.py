@@ -115,7 +115,8 @@ class Engine:
         self.telemetry = LadderTelemetry()
         self.rebind(index)
 
-    def rebind(self, index: CPQxIndex) -> None:
+    def rebind(self, index: CPQxIndex,
+               stats: IndexStats | None = None) -> None:
         """Swap in a new index (a maintenance flush or a rebuild) in
         place: re-pulls the host-side statistics view (optimizer +
         capacity estimator) and the default caps, and rebuilds the
@@ -123,13 +124,19 @@ class Engine:
         Compiled executables are keyed on (plan shape, caps, n_vertices)
         — not on the index identity — so traffic after a rebind keeps
         hitting the same jit cache as long as the flushed arrays keep
-        their capacities."""
+        their capacities.
+
+        ``stats`` optionally supplies a pre-built statistics view for
+        this exact index — a checkpoint restore passes one whose
+        endpoint cache is pre-warmed from the donor, and the sharded
+        path can pass its replicated-leaf view — skipping the default
+        ``IndexStats.from_index`` pull."""
         self.index = index
         self._available = index.available_seqs() if index.interests is not None else None
         # the statistics view: per-class pair counts, the l2c class table
         # and per-seq prefix sums (a few KB — pulled once per rebind, so
         # a maintenance flush refreshes what the optimizer plans against)
-        self.stats = IndexStats.from_index(index)
+        self.stats = stats if stats is not None else IndexStats.from_index(index)
         self._class_sizes = self.stats.class_sizes
         self._l2c_host = self.stats.l2c_cls
         self._default_caps = default_caps(index)  # one device sync, here

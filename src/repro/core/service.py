@@ -159,6 +159,7 @@ class QueryService:
                     f"the index is k={maintainer.index.k} — its "
                     "proposals could never be indexed")
         self._next_rid = 0
+        self._ckpt_step = 0  # next checkpoint step id (monotone)
         self._planned_since_adapt = 0
         self._rungs_seen = engine.telemetry.retry_rungs
         self._queue: list[QueryRequest] = []
@@ -382,6 +383,53 @@ class QueryService:
         """O(1) invalidation: results *and* plans are keyed by epoch, so
         stale entries become unreachable and age out of their LRUs."""
         self.graph_epoch += 1
+
+    # ------------------------------------------------------------------ #
+    # lifecycle: checkpoint / warm restart (core.lifecycle)
+    # ------------------------------------------------------------------ #
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Snapshot the full serving state as one atomic committed step;
+        returns the step id.
+
+        Consistency: the queue is drained first — the SAME
+        ``_drain_updates`` one-batch round every query drain runs — so
+        the snapshot is taken at a quiescent epoch where device arrays,
+        host mirror, interest set and sketch all agree.  A crash during
+        the write leaves the previous committed step intact (the
+        checkpoint layer's rename-commit + LATEST-pointer contract)."""
+        from . import lifecycle  # lazy: service must import without it
+
+        self.flush()  # drain pending writes AND reads at one epoch
+        if step is None:
+            step = self._ckpt_step
+        leaves, extra = lifecycle.service_leaves(self)
+        lifecycle.save_checkpoint(ckpt_dir, step, leaves, extra=extra)
+        self._ckpt_step = step + 1
+        return step
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Warm-restart THIS service from a committed checkpoint (latest
+        unless ``step`` pins one): rebind the engine to the restored
+        arrays (pre-warmed statistics), swap in the restored mirror and
+        adapter, and bump the epoch PAST both the live one and the
+        checkpoint's — every cached answer and plan from any pre-restore
+        state becomes unreachable in O(1).  In-flight reads/writes are
+        flushed first so they complete against the state they targeted.
+        Returns the restored step id."""
+        from . import lifecycle
+
+        self.flush()  # complete in-flight work on the pre-restore state
+        state = lifecycle.load_state(ckpt_dir, step)
+        self.engine.rebind(state.index, stats=state.stats)
+        self.maintainer = state.maintainer
+        self.adapter = state.adapter
+        self.graph_epoch = max(self.graph_epoch, state.epoch) + 1
+        self._ckpt_step = max(self._ckpt_step, state.step + 1)
+        self._pending_updates = []
+        self._planned_since_adapt = 0
+        self._rungs_seen = self.engine.telemetry.retry_rungs
+        return state.step
 
     # ------------------------------------------------------------------ #
     # the adaptation loop (core.workload)

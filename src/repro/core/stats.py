@@ -248,3 +248,33 @@ class IndexStats:
                 max_in=int(in_cnt.max(initial=0)))
         self._endpoints[seq] = res
         return res
+
+    # ------------------------------------------------------------------ #
+    # checkpoint codec for the endpoint cache — a restored engine starts
+    # with the donor's priced sequences pre-warmed, so the first query
+    # after a warm restart plans without a device pull.
+    # ------------------------------------------------------------------ #
+
+    def export_endpoints(self) -> np.ndarray | None:
+        """Cached ``seq_endpoints`` results as int64 rows
+        ``[seq padded with -1 | d_src d_dst max_out max_in]``; None when
+        nothing has been priced yet."""
+        if not self._endpoints:
+            return None
+        width = max(len(s) for s in self._endpoints)
+        rows = [list(s) + [-1] * (width - len(s)) + list(e)
+                for s, e in self._endpoints.items()]
+        return np.asarray(rows, np.int64).reshape(-1, width + 4)
+
+    def seed_endpoints(self, rows) -> None:
+        """Pre-warm the endpoint cache from :meth:`export_endpoints` rows.
+        Only sequences still present in this snapshot are accepted — a
+        stale row from another index cannot poison the cache."""
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        for row in rows.reshape(rows.shape[0], -1):
+            seq = tuple(int(x) for x in row[:-4] if x >= 0)
+            if seq in self.seq_ranges:
+                self._endpoints[seq] = SeqEndpoints(
+                    *(int(x) for x in row[-4:]))

@@ -1,0 +1,276 @@
+"""Crash-consistency harness for the zero-downtime index lifecycle.
+
+The contract under test (``repro.core.lifecycle`` + ``repro.checkpoint``):
+a crash at ANY point — mid-leaf-write, before the data-dir rename, after
+it but before the LATEST pointer moves, or in the maintenance window
+between a graph-batch apply and its flush — leaves the last *committed*
+step restorable with answers exactly equal to the numpy oracle on the
+checkpointed graph.  No injected failure may ever surface a half-state.
+
+Faults are injected by monkeypatching the exact primitive that would
+fail (``os.rename`` / ``os.replace`` / ``MaintainableIndex.flush``) and
+by corrupting the on-disk layout directly (torn pointer, partial
+``.tmp`` dir) — the same failure modes a real power cut produces.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import committed_steps, latest_step
+from repro.core import index as cindex, lifecycle, oracle
+from repro.core.engine import Engine
+from repro.core.graph import example_graph
+from repro.core.maintenance import MaintainableIndex
+from repro.core.query import parse
+from repro.core.service import QueryService
+from repro.core.workload import AdaptationController
+
+
+def _rows_set(rows):
+    return {tuple(r) for r in np.asarray(rows).tolist()}
+
+
+def _parse_probes(g):
+    return [parse(t, None, g.n_labels)
+            for t in ("l0 . l1", "(l0 . l0) & l0-", "l0 & id", "l1 . l0")]
+
+
+def _assert_serves_oracle(svc, g=None):
+    svc.flush()  # drain queued updates BEFORE reading the mirror graph
+    if g is None:
+        g = svc.maintainer.g
+    for q in _parse_probes(g):
+        assert _rows_set(svc.query(q)) == oracle.cpq_eval(g, q), q
+
+
+def _fresh_service(adapter: bool = False):
+    g = example_graph()
+    interests = [(0, 1), (0, 0)] if adapter else None
+    mi = MaintainableIndex.build(g, 2, interests=interests)
+    engine = Engine(mi.flush())
+    adp = AdaptationController(2) if adapter else None
+    return QueryService(engine, maintainer=mi, adapter=adp)
+
+
+# ---------------------------------------------------------------------- #
+# happy-path round trips (the baseline the fault tests lean on)
+# ---------------------------------------------------------------------- #
+
+
+class TestRoundTrip:
+    def test_index_save_restore_bit_identical(self, ex_graph, tmp_path):
+        idx = cindex.build(ex_graph, 2)
+        idx.save(str(tmp_path))
+        back = cindex.CPQxIndex.restore(str(tmp_path))
+        for f in cindex.DeviceIndexArrays._fields:
+            a = np.asarray(getattr(idx.arrays, f))
+            b = np.asarray(getattr(back.arrays, f))
+            assert a.shape == b.shape and np.array_equal(a, b), f
+        assert back.seq_ranges == idx.seq_ranges
+        assert back.caps == idx.caps and back.k == idx.k
+        assert back.interests == idx.interests
+        eng = Engine(back)
+        for q in _parse_probes(ex_graph):
+            assert _rows_set(eng.execute(q)) == oracle.cpq_eval(ex_graph, q)
+
+    def test_service_checkpoint_promotes_cold_replica(self, tmp_path):
+        svc = _fresh_service(adapter=True)
+        g0 = svc.maintainer.g
+        for q in _parse_probes(g0):
+            svc.query(q)
+        svc.apply_updates([("insert_edge", 0, 5, 0),
+                           ("delete_edge", 0, 1, 0)])
+        svc.query(_parse_probes(g0)[0])  # drain the write batch
+        step = svc.checkpoint(str(tmp_path))
+        donor_mirror = svc.maintainer.export_state()
+        donor_sketch = svc.adapter.export_state()
+
+        replica = lifecycle.restore_service(str(tmp_path), step)
+        # promoted mid-traffic: fresh epoch strictly past the donor's
+        assert replica.graph_epoch > svc.graph_epoch
+        # the mirror came over exactly (graph, lazy partition, caps)
+        for key, arr in replica.maintainer.export_state().items():
+            assert np.array_equal(arr, donor_mirror[key]), key
+        # so did the adaptation loop (sketch counters, dwell, rounds) —
+        # compared before serving, since served queries feed the sketch
+        for key, arr in replica.adapter.export_state().items():
+            assert np.array_equal(arr, donor_sketch[key]), key
+        _assert_serves_oracle(replica, svc.maintainer.g)
+        # and it keeps serving under further maintenance
+        replica.apply_updates([("insert_edge", 2, 9, 1)])
+        _assert_serves_oracle(replica)
+
+    def test_checkpoint_drains_pending_writes_first(self, tmp_path):
+        """The snapshot must be taken at a quiescent epoch: updates
+        queued (not yet drained) at checkpoint time are IN the
+        checkpoint, via the same one-batch ``_drain_updates`` round."""
+        svc = _fresh_service()
+        svc.apply_updates([("insert_edge", 3, 7, 1)])
+        assert svc.pending_updates == 1  # queued, not applied
+        step = svc.checkpoint(str(tmp_path))
+        assert svc.pending_updates == 0
+        replica = lifecycle.restore_service(str(tmp_path), step)
+        g = replica.maintainer.g
+        assert (3, 7, 1) in {tuple(map(int, e)) for e in g._base_edges()}
+        _assert_serves_oracle(replica, g)
+
+    def test_restore_into_live_service_bumps_epoch(self, tmp_path):
+        svc = _fresh_service()
+        step = svc.checkpoint(str(tmp_path))
+        g_at_ckpt = svc.maintainer.g
+        svc.apply_updates([("insert_edge", 1, 8, 0)])
+        svc.query(_parse_probes(g_at_ckpt)[0])
+        epoch_before = svc.graph_epoch
+        assert svc.restore(str(tmp_path), step) == step
+        assert svc.graph_epoch > epoch_before  # O(1) cache invalidation
+        _assert_serves_oracle(svc, g_at_ckpt)
+
+
+# ---------------------------------------------------------------------- #
+# fault injection — the archetype deliverable
+# ---------------------------------------------------------------------- #
+
+
+class TestFaultInjection:
+    def test_torn_latest_pointer_falls_back_to_scan(self, tmp_path):
+        svc = _fresh_service()
+        svc.checkpoint(str(tmp_path))
+        svc.apply_updates([("insert_edge", 4, 6, 1)])
+        last = svc.checkpoint(str(tmp_path))
+        g_last = svc.maintainer.g
+        # a torn pointer: partial garbage write, no trailing step id
+        with open(os.path.join(str(tmp_path), "LATEST"), "w") as f:
+            f.write("\x00\x00garbage")
+        assert latest_step(str(tmp_path)) == last  # scan fallback
+        replica = lifecycle.restore_service(str(tmp_path))
+        _assert_serves_oracle(replica, g_last)
+
+    def test_dangling_latest_pointer_falls_back(self, tmp_path):
+        svc = _fresh_service()
+        last = svc.checkpoint(str(tmp_path))
+        with open(os.path.join(str(tmp_path), "LATEST"), "w") as f:
+            f.write(str(last + 7))  # points at a step that never existed
+        assert latest_step(str(tmp_path)) == last
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              svc.maintainer.g)
+
+    def test_partial_tmp_dir_never_considered_committed(self, tmp_path):
+        svc = _fresh_service()
+        last = svc.checkpoint(str(tmp_path))
+        g_last = svc.maintainer.g
+        # a writer died mid-step: leaves on disk, no manifest, no rename
+        tmp = os.path.join(str(tmp_path), f"step_{last + 1:09d}.tmp")
+        os.makedirs(tmp)
+        np.save(os.path.join(tmp, "leaf_00000.npy"), np.arange(3))
+        assert latest_step(str(tmp_path)) == last
+        assert committed_steps(str(tmp_path)) == [last]
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              g_last)
+        # a retried save over the stale debris commits cleanly
+        svc.apply_updates([("insert_edge", 2, 11, 0)])
+        nxt = svc.checkpoint(str(tmp_path))
+        assert nxt == last + 1 and latest_step(str(tmp_path)) == nxt
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              svc.maintainer.g)
+
+    def test_fully_renamed_dir_without_manifest_skipped(self, tmp_path):
+        svc = _fresh_service()
+        last = svc.checkpoint(str(tmp_path))
+        bogus = os.path.join(str(tmp_path), f"step_{last + 3:09d}")
+        os.makedirs(bogus)  # renamed-looking dir, but no manifest inside
+        with open(os.path.join(str(tmp_path), "LATEST"), "w") as f:
+            f.write("not-a-step")
+        assert latest_step(str(tmp_path)) == last
+
+    def test_crash_during_data_rename(self, tmp_path, monkeypatch):
+        """Kill the writer at the atomic-commit rename itself: the old
+        step stays the committed one; a retry then succeeds."""
+        svc = _fresh_service()
+        first = svc.checkpoint(str(tmp_path))
+        g_first = svc.maintainer.g
+        svc.apply_updates([("insert_edge", 5, 10, 1)])
+
+        real_rename = os.rename
+
+        def dying_rename(src, dst):
+            if str(src).endswith(".tmp"):
+                raise OSError("injected crash at commit rename")
+            return real_rename(src, dst)
+
+        monkeypatch.setattr(os, "rename", dying_rename)
+        with pytest.raises(OSError, match="injected crash"):
+            svc.checkpoint(str(tmp_path))
+        monkeypatch.undo()
+
+        assert latest_step(str(tmp_path)) == first
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              g_first)
+        nxt = svc.checkpoint(str(tmp_path))  # retry over the debris
+        assert latest_step(str(tmp_path)) == nxt
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              svc.maintainer.g)
+
+    def test_crash_between_rename_and_latest(self, tmp_path, monkeypatch):
+        """Kill the writer after the data dir renamed but before LATEST
+        moved: the pointer is the commit point, so restore returns the
+        PREVIOUS step — consistent, never the half-published one."""
+        svc = _fresh_service()
+        first = svc.checkpoint(str(tmp_path))
+        g_first = svc.maintainer.g
+        svc.apply_updates([("insert_edge", 6, 12, 0)])
+
+        def dying_replace(src, dst):
+            raise OSError("injected crash before LATEST")
+
+        monkeypatch.setattr(os, "replace", dying_replace)
+        with pytest.raises(OSError, match="injected crash"):
+            svc.checkpoint(str(tmp_path))
+        monkeypatch.undo()
+
+        # the new dir IS on disk, but LATEST still names the old step
+        assert len(committed_steps(str(tmp_path))) == 2
+        assert latest_step(str(tmp_path)) == first
+        _assert_serves_oracle(lifecycle.restore_service(str(tmp_path)),
+                              g_first)
+
+    def test_crash_between_apply_and_flush(self, tmp_path, monkeypatch):
+        """The maintenance half of the contract: a crash in the window
+        after the graph batch hit the host mirror but before the
+        mirror→device flush published it.  The dying process's state is
+        torn by construction — the restart must come up on the last
+        committed checkpoint, answering for the checkpointed graph."""
+        svc = _fresh_service()
+        svc.apply_updates([("insert_edge", 0, 5, 0)])
+        step = svc.checkpoint(str(tmp_path))
+        g_ckpt = svc.maintainer.g
+        ans_ckpt = {q: oracle.cpq_eval(g_ckpt, q)
+                    for q in _parse_probes(g_ckpt)}
+
+        svc.apply_updates([("delete_edge", 0, 5, 0),
+                           ("insert_edge", 1, 9, 1)])
+
+        def dying_flush(self, caps=None):
+            raise RuntimeError("injected crash between apply and flush")
+
+        monkeypatch.setattr(MaintainableIndex, "flush", dying_flush)
+        with pytest.raises(RuntimeError, match="injected crash"):
+            svc.query(_parse_probes(g_ckpt)[0])  # drain applies, flush dies
+        monkeypatch.undo()
+        # the dying service really is torn: mirror has the updates, the
+        # device arrays don't — exactly the state a restart must escape
+        assert svc.maintainer.g is not g_ckpt
+
+        replica = lifecycle.restore_service(str(tmp_path), step)
+        for q, truth in ans_ckpt.items():
+            assert _rows_set(replica.query(q)) == truth, q
+        # and the replayed updates land cleanly on the restored state
+        replica.apply_updates([("delete_edge", 0, 5, 0),
+                               ("insert_edge", 1, 9, 1)])
+        _assert_serves_oracle(replica)
+
+    def test_no_committed_step_raises(self, tmp_path):
+        assert latest_step(str(tmp_path)) is None
+        with pytest.raises(FileNotFoundError):
+            lifecycle.restore_service(str(tmp_path))

@@ -8,16 +8,19 @@
 * the mirror→device flush agrees with the mirror at every prefix point.
 """
 
+import tempfile
+
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
-from repro.core import oracle
+from repro.core import lifecycle, oracle
 from repro.core.engine import Engine
 from repro.core.graph import LabeledGraph
 from repro.core.maintenance import MaintainableIndex
+from repro.core.service import QueryService
 
 N_VERTICES = 7
 N_LABELS = 2
@@ -109,3 +112,85 @@ class TestInterleavingProperty:
                     sig = frozenset(s for s in sig if s in mi.index.interests)
                 assert sig == sig0, f"class {c} not signature-pure"
                 assert (p[0] == p[1]) == mi.index.cyclic[c]
+
+
+# an event drives one step of the lifecycle interleaving:
+# kind 0-2 = graph op (as op_st), 3 = interest op, 4 = checkpoint,
+# 5 = restore an earlier checkpoint; (a, b) parameterize the event.
+event_st = st.tuples(st.integers(0, 5), st.integers(0, N_VERTICES - 1),
+                     st.integers(0, N_VERTICES - 1), st.integers(0, 3))
+
+
+class TestCheckpointInterleavingProperty:
+    @given(edges=st.lists(edge_st, min_size=2, max_size=8),
+           events=st.lists(event_st, min_size=2, max_size=8),
+           qseed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_restore_plus_replay_equals_from_scratch(self, edges, events,
+                                                     qseed):
+        """Crash-recovery is equivalent to never having crashed: under a
+        random interleaving of graph updates, interest updates, queries,
+        checkpoints, and in-place restores, restoring ANY checkpoint
+        whose history is a prefix of the final history and replaying the
+        suffix of updates reaches exactly the final serving state — same
+        graph, same interests, answers equal to the semantics oracle on
+        a from-scratch view of the final graph."""
+        g = LabeledGraph.from_edges(N_VERTICES, N_LABELS, edges)
+        mi = MaintainableIndex.build(g, 2, interests=[(0,), (1,), (2,), (3,)])
+        svc = QueryService(Engine(mi.flush()), maintainer=mi)
+        rng = np.random.default_rng(qseed)
+
+        with tempfile.TemporaryDirectory() as d:
+            log: list = []  # concrete update tuples applied so far
+            ckpts: list = []  # (step, snapshot of log at checkpoint time)
+            step0 = svc.checkpoint(d)
+            ckpts.append((step0, []))
+
+            for kind, a, b, c in events:
+                if kind <= 2:  # graph update through the write path
+                    upd = _to_update((kind, a, b, c % N_LABELS),
+                                     svc.maintainer.g)
+                    svc.apply_updates([upd])
+                    log.append(upd)
+                elif kind == 3:  # interest update (k=2: len-2 sequences)
+                    seq = (a % 4, b % 4)
+                    op = ("insert_interest" if c % 2 else "delete_interest",
+                          seq)
+                    svc.apply_updates([op])
+                    log.append(op)
+                elif kind == 4:
+                    step = svc.checkpoint(d)
+                    ckpts.append((step, list(log)))
+                else:  # in-place restore: history rewinds to the ckpt's
+                    step, snap = ckpts[b % len(ckpts)]
+                    svc.restore(d, step)
+                    log = list(snap)
+                if a % 2:  # interleave a served query (drains the queue)
+                    q = oracle.random_cpq(rng, svc.maintainer.g, 2)
+                    # careful: the query itself drains queued updates
+                    got = {tuple(r) for r in svc.query(q).tolist()}
+                    assert got == oracle.cpq_eval(svc.maintainer.g, q), q
+
+            svc.flush()
+            final_edges = {tuple(map(int, e))
+                           for e in svc.maintainer.g._base_edges()}
+            final_interests = svc.maintainer.index.interests
+            probes = [oracle.random_cpq(rng, svc.maintainer.g, 2)
+                      for _ in range(3)]
+            truth = {q: oracle.cpq_eval(svc.maintainer.g, q) for q in probes}
+
+            for step, snap in ckpts:
+                if log[:len(snap)] != snap:
+                    continue  # a restore rewound history past this ckpt
+                replica = lifecycle.restore_service(d, step)
+                suffix = log[len(snap):]
+                if suffix:
+                    replica.apply_updates(suffix)
+                replica.flush()
+                assert {tuple(map(int, e))
+                        for e in replica.maintainer.g._base_edges()} \
+                    == final_edges
+                assert replica.maintainer.index.interests == final_interests
+                for q in probes:
+                    got = {tuple(r) for r in replica.query(q).tolist()}
+                    assert got == truth[q], (step, q)
