@@ -1,0 +1,190 @@
+"""Multi-tenant serving under drifting traffic — the PR 7 serving gate.
+
+One bounded-queue :class:`repro.core.service.QueryService` (union
+dispatch on, ``auto_flush`` off) replays an interleaved two-tenant
+stream from :func:`repro.data.graphs.drifting_workload`: tenant
+``alpha`` (3x the traffic) drifts phase A -> B while tenant ``beta``
+drifts B -> A, so their hot sets differ at every instant AND move —
+the per-tenant sketches and the round-robin interest arbitration both
+have to work for either tenant to win adaptation capacity.
+
+Traffic arrives in bursts larger than ``max_queue``, so admission
+control *must* shed — the gate checks it did (``stats.shed > 0``) and,
+the flip side of the same contract, that every request it *accepted*
+completed with a result (zero lost accepted requests).  A few graph
+updates land between bursts to exercise the write path mid-replay.
+
+Correctness is gated the only way serving can be: sampled probes.  At
+submit time, whenever no writes are pending (the graph the request
+will see is exactly the current one), the numpy oracle's answer is
+recorded; after the replay every probed request's rows must equal its
+recorded truth — answers == oracle *at the submit-time graph*, which
+is the strict-serializability claim made executable.
+
+Emits per-tenant p50/p99 latency and qps plus shed/served/cache-hit
+counts.  Any gate failure exits non-zero.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.service import QueryService
+from repro.core.workload import AdaptationConfig, AdaptationController
+from repro.data.graphs import drifting_workload
+
+from .common import ADAPTIVE_PHASES, DATASETS, emit
+
+TENANTS = {
+    # name -> (phase schedule, traffic weight): alpha drifts A->B at 3x
+    # the volume of beta, which drifts B->A.
+    "alpha": ([ADAPTIVE_PHASES[0], ADAPTIVE_PHASES[1]], 3.0),
+    "beta": ([ADAPTIVE_PHASES[1], ADAPTIVE_PHASES[0]], 1.0),
+}
+
+# graph updates interleaved between bursts (insert then retract, so the
+# final graph matches the initial one and phases stay comparable).
+UPDATE_SLICES = [
+    [("insert_edge", 0, 51, 1)],
+    [("delete_edge", 0, 51, 1)],
+]
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in arr.tolist()}
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def bench_serving(ds: str, n_per_phase: int, burst: int,
+                  adapt_interval: int) -> bool:
+    g = DATASETS[ds]()
+    k = 2
+
+    mi = MaintainableIndex.build(g, k, interests=[])
+    adapter = AdaptationController(
+        k, config=AdaptationConfig(budget=2, min_count=3.0, dwell=1,
+                                   swap_margin=2.0, decay=0.5))
+    svc = QueryService(Engine(mi.flush()), maintainer=mi, adapter=adapter,
+                       adapt_interval=adapt_interval, max_batch=16,
+                       max_queue=32, auto_flush=False, union=True)
+
+    stream = drifting_workload(g, None, n_per_phase, seed=11,
+                               tenants=TENANTS)
+    probes = []  # (request, truth rows) sampled at submit time
+    accepted = []  # every request admission control let through
+    upd_i = 0
+    for pi, slot in enumerate(stream):
+        for off in range(0, len(slot), burst):
+            for ti, (tenant, q) in enumerate(slot[off:off + burst]):
+                req = svc.submit(q, tenant=tenant)
+                if req.shed:
+                    continue
+                accepted.append(req)
+                # probe: only when the graph the request sees is the
+                # current one (no writes pending) and cheaply subsampled
+                if svc.pending_updates == 0 and ti % 7 == 0:
+                    probes.append((req, oracle.cpq_eval(mi.g, q)))
+            svc.flush()
+            if upd_i < len(UPDATE_SLICES):
+                svc.apply_updates(UPDATE_SLICES[upd_i])
+                upd_i += 1
+        svc.flush()
+        emit(f"serving/{ds}/phase{pi}/progress", 0.0,
+             f"served={svc.stats.served};shed={svc.stats.shed};"
+             f"adapt_rounds={svc.stats.adapt_rounds};"
+             f"union_lanes={svc.engine.telemetry.union_lanes}")
+
+    failed = False
+
+    # gate 1: answers == oracle at the submit-time graph
+    bad = sum(1 for req, truth in probes
+              if not req.done or req.result is None
+              or _rows(req.result) != truth)
+    ok1 = bad == 0 and len(probes) > 0
+    emit(f"serving/{ds}/answers", 0.0,
+         f"probes={len(probes)};mismatches={bad};"
+         f"{'PASS' if ok1 else 'FAIL'}")
+    failed |= not ok1
+
+    # gate 2: admission control shed under pressure, yet no accepted
+    # request was lost (every non-shed submit completed with rows)
+    st = svc.stats
+    lost = sum(1 for req in accepted
+               if not req.done or req.result is None)
+    ok2 = st.shed > 0 and lost == 0 and len(st.tenants) >= 2
+    emit(f"serving/{ds}/admission", 0.0,
+         f"shed={st.shed};lost_accepted={lost};"
+         f"tenants={len(st.tenants)};{'PASS' if ok2 else 'FAIL'}")
+    failed |= not ok2
+
+    # gate 3: adaptation fired from multi-tenant traffic
+    ok3 = st.adapt_rounds >= 1
+    emit(f"serving/{ds}/adaptation", 0.0,
+         f"adapt_rounds={st.adapt_rounds};"
+         f"mined={sorted(s for s in mi.index.interests if len(s) >= 2)};"
+         f"{'PASS' if ok3 else 'FAIL'}")
+    failed |= not ok3
+
+    # per-tenant latency / throughput over the full accepted log
+    lat = {t: [] for t in st.tenants}
+    t_first, t_last = None, None
+    for req in accepted:
+        if not req.done:
+            continue
+        lat.setdefault(req.tenant, []).append(req.latency * 1e6)
+        t_first = req.t_submit if t_first is None else min(t_first,
+                                                          req.t_submit)
+        t_last = req.t_done if t_last is None else max(t_last, req.t_done)
+    wall = max(1e-9, (t_last or 0.0) - (t_first or 0.0))
+    for t, ts in sorted(st.tenants.items()):
+        xs = lat.get(t, [])
+        emit(f"serving/{ds}/tenant/{t}/p50", _pct(xs, 50),
+             f"submitted={ts.submitted};served={ts.served};"
+             f"shed={ts.shed};cache_hits={ts.cache_hits}")
+        emit(f"serving/{ds}/tenant/{t}/p99", _pct(xs, 99),
+             f"qps={ts.served / wall:.1f}")
+
+    emit(f"serving/{ds}/acceptance", 0.0,
+         f"answers,admission,adaptation;{'FAIL' if failed else 'PASS'}")
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI config (one dataset, short stream)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        jobs = [("skewed-hub-small", 96, 48, 24)]
+    else:
+        jobs = [("skewed-hub-small", 240, 48, 24),
+                ("skewed-hub", 240, 48, 24)]
+
+    failed = False
+    for ds, n_per_phase, burst, interval in jobs:
+        failed |= bench_serving(ds, n_per_phase, burst, interval)
+
+    if args.json:
+        from .common import write_json
+
+        write_json(args.json, bench="bench_serving", smoke=args.smoke)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ BENCHES = {
     "throughput": "benchmarks.bench_throughput",  # serving qps (PR 1)
     "adaptive": "benchmarks.bench_adaptive",  # drifting-workload mining (PR 5)
     "recovery": "benchmarks.bench_recovery",  # kill-and-recover TTFCA (PR 6)
+    "serving": "benchmarks.bench_serving",  # multi-tenant SLO serving (PR 7)
 }
 
 

@@ -46,6 +46,26 @@ flags so every shard and the host agree on the same retry decision.
 This is the honest dynamic->static bridge — estimates and optimizer
 cost models can be arbitrarily wrong about *sizes* without ever being
 wrong about *answers*.
+
+Two serving-oriented extensions (PR 7):
+
+* **async dispatch** — ``run_batch_async`` returns immediately after the
+  device dispatch (JAX dispatch is asynchronous); ``harvest_batch``
+  blocks and converts.  The service's pipelined drain plans bucket N+1
+  on the host while bucket N executes on device.
+* **the union executable** — heterogeneous plan *shapes* normally
+  serialize into one dispatch per shape.  :func:`plan_program` compiles
+  any plan shape into a linear postorder program over a small value
+  stack (opcodes below), and :func:`run_union_batch` interprets a whole
+  *mixed-shape* batch in ONE vmapped executable: each lane streams its
+  own opcode/range rows as data, shorter programs pad with ``OP_NOP``.
+  Every step evaluates all candidate operators and selects by opcode
+  (the price of shape-generic compilation under vmap), so the union
+  path trades per-step redundancy for dispatch amortization — the
+  engine reserves it for straggler buckets below ``min_bucket``.
+  Union programs run entirely in pair space (lookups materialize
+  eagerly); by cycle-purity of classes this is answer-identical to the
+  two-stage walker, and the sticky overflow contract is unchanged.
 """
 
 from __future__ import annotations
@@ -302,6 +322,150 @@ def run_plan_batch(a: DeviceIndexArrays, plan, caps: QueryCaps,
 
 
 # ---------------------------------------------------------------------- #
+# the union executable — one dispatch for a mixed-shape batch
+# ---------------------------------------------------------------------- #
+
+OP_NOP = 0  # padding past the end of a lane's program
+OP_LOOKUP = 1  # push materialize(lookup(start, len))
+OP_JOIN = 2  # pop b, pop a, push a ⋈ b
+OP_CONJ = 3  # pop b, pop a, push a ∩ b
+OP_CONJ_ID = 4  # replace top with its v == u filter
+OP_IDENTITY = 5  # push the identity relation
+
+# per-opcode stack-pointer delta and write offset (relative to sp)
+_OP_DELTA = (0, 1, -1, -1, 0, 1)
+_OP_WRITE = (0, 0, -2, -2, -1, 0)
+
+
+def plan_program(plan):
+    """Compile a plan (or its shape) to the union executable's postorder
+    program.  Returns ``(opcodes, stack_depth)`` — opcodes is a list of
+    ints, LOOKUP steps consume ``lookup_ranges`` rows in exactly the
+    order :func:`run_plan_ops` does (DFS, segments left to right)."""
+    prog: list = []
+    depth = 0
+    max_depth = 0
+
+    def push():
+        nonlocal depth, max_depth
+        depth += 1
+        max_depth = max(max_depth, depth)
+
+    def emit(node):
+        nonlocal depth
+        kind = node[0]
+        if kind == "lookup":
+            nseg = node[1] if isinstance(node[1], int) else len(node[1])
+            prog.append(OP_LOOKUP)
+            push()
+            for _ in range(nseg - 1):
+                prog.append(OP_LOOKUP)
+                push()
+                prog.append(OP_JOIN)
+                depth -= 1
+        elif kind == "identity":
+            prog.append(OP_IDENTITY)
+            push()
+        elif kind == "conj_id":
+            emit(node[1])
+            prog.append(OP_CONJ_ID)
+        elif kind in ("conj", "join"):
+            emit(node[1])
+            emit(node[2])
+            prog.append(OP_CONJ if kind == "conj" else OP_JOIN)
+            depth -= 1
+        else:
+            raise ValueError(kind)
+
+    emit(plan)
+    return prog, max_depth
+
+
+def program_ranges(prog, ranges: np.ndarray, n_steps: int) -> np.ndarray:
+    """Step-align one lane's (n_lookups, 2) ranges to its program: LOOKUP
+    steps carry their (start, len) row, everything else (0, 0), padded to
+    ``n_steps``."""
+    out = np.zeros((n_steps, 2), dtype=np.int32)
+    j = 0
+    for i, op in enumerate(prog):
+        if op == OP_LOOKUP:
+            out[i] = ranges[j]
+            j += 1
+    return out
+
+
+def _run_program_lane(ops: PlanOps, caps: QueryCaps, stack_size: int,
+                      opcodes: jax.Array, step_ranges: jax.Array):
+    """Interpret one lane of the union executable.
+
+    The value stack holds ``stack_size`` capacity-padded pair relations;
+    every step computes ALL candidate operator results and the opcode
+    selects one (vmap executes every branch anyway, so a lax.switch
+    would buy nothing).  Overflow is one sticky flag for the lane,
+    exactly as in the shaped path.
+    """
+    cap = caps.pair_cap
+    sentinel_col = jnp.full((cap,), R.SENTINEL, R.I32)
+
+    def step(carry, inp):
+        v, u, cnt, sp, ovf = carry
+        op, rng = inp
+
+        def slot(i):
+            i = jnp.clip(i, 0, stack_size - 1)
+            return R.Relation((v[i], u[i]), cnt[i], jnp.asarray(False))
+
+        top = slot(sp - 1)
+        sec = slot(sp - 2)
+        lk = ops.materialize(
+            ops.lookup_classes(rng[0], rng[1], caps.class_cap), cap)
+        cands = [
+            R.Relation((sentinel_col, sentinel_col), jnp.asarray(0, R.I32),
+                       jnp.asarray(False)),  # NOP
+            lk,  # LOOKUP
+            ops.join_pairs(sec, top, caps.join_cap, cap),  # JOIN
+            ops.conj_pairs(sec, top),  # CONJ
+            ops.conj_id_pairs(top),  # CONJ_ID
+            ops.identity_pairs(cap),  # IDENTITY
+        ]
+        sel_v = jnp.stack([r.cols[0] for r in cands])[op]
+        sel_u = jnp.stack([r.cols[1] for r in cands])[op]
+        sel_c = jnp.stack([jnp.asarray(r.count, R.I32) for r in cands])[op]
+        sel_o = jnp.stack([jnp.asarray(r.overflow) for r in cands])[op]
+        widx = jnp.where(op == OP_NOP, -1,
+                         sp + jnp.asarray(_OP_WRITE, R.I32)[op])
+        mask = jnp.arange(stack_size, dtype=R.I32) == widx
+        v = jnp.where(mask[:, None], sel_v[None, :], v)
+        u = jnp.where(mask[:, None], sel_u[None, :], u)
+        cnt = jnp.where(mask, sel_c, cnt)
+        ovf = ovf | (sel_o & (op != OP_NOP))
+        sp = sp + jnp.asarray(_OP_DELTA, R.I32)[op]
+        return (v, u, cnt, sp, ovf), None
+
+    zeros = jnp.full((stack_size, cap), R.SENTINEL, R.I32)
+    carry = (zeros, zeros, jnp.zeros((stack_size,), R.I32),
+             jnp.asarray(0, R.I32), jnp.asarray(False))
+    (v, u, cnt, _, ovf), _ = jax.lax.scan(step, carry, (opcodes, step_ranges))
+    return ops.finish(R.Relation((v[0], u[0]), cnt[0], ovf))
+
+
+@functools.partial(jax.jit, static_argnames=("caps", "stack_size",
+                                             "n_vertices"))
+def run_union_batch(a: DeviceIndexArrays, caps: QueryCaps, stack_size: int,
+                    n_vertices: int, opcodes: jax.Array,
+                    step_ranges: jax.Array):
+    """Mixed-shape batch through ONE executable: ``opcodes`` (batch, T)
+    and ``step_ranges`` (batch, T, 2) stream per-lane programs as traced
+    data, so the jit key is only (T, stack_size, caps, n_vertices).
+    Returns a batched Relation + per-lane sticky overflow, the same
+    contract as :func:`run_plan_batch`."""
+    ops = LocalOps(a, n_vertices)
+    return jax.vmap(
+        lambda oc, rg: _run_program_lane(ops, caps, stack_size, oc, rg)
+    )(opcodes, step_ranges)
+
+
+# ---------------------------------------------------------------------- #
 # host-facing backend contract
 # ---------------------------------------------------------------------- #
 
@@ -317,6 +481,10 @@ class ExecutionBackend(abc.ABC):
 
     n_vertices: int
 
+    #: whether :meth:`run_union_batch` is implemented (the engine falls
+    #: back to per-shape dispatches when it is not).
+    supports_union = False
+
     @abc.abstractmethod
     def run(self, shape, caps: QueryCaps, ranges: np.ndarray):
         """One query.  ``ranges`` (n_lookups, 2) -> (rows | None, overflow):
@@ -328,9 +496,39 @@ class ExecutionBackend(abc.ABC):
         """Batch of same-shape queries.  ``ranges`` (batch, n_lookups, 2)
         -> (list of rows-or-None per lane, (batch,) bool overflow)."""
 
+    def run_union_batch(self, opcodes: np.ndarray, caps: QueryCaps,
+                        stack_size: int, step_ranges: np.ndarray):
+        """Mixed-shape batch via the union executable.  ``opcodes``
+        (batch, T), ``step_ranges`` (batch, T, 2); same result contract
+        as :meth:`run_batch`.  Optional — guarded by ``supports_union``."""
+        raise NotImplementedError
+
+    # -- async dispatch (pipelined drain) -- #
+    #
+    # ``*_async`` returns an opaque handle immediately after the device
+    # dispatch; ``harvest_batch`` blocks on it and converts to the
+    # ``run_batch`` result contract.  The defaults degrade to synchronous
+    # execution so every backend supports the pipelined drain.
+
+    def run_batch_async(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        return ("sync", self.run_batch(shape, caps, ranges))
+
+    def run_union_batch_async(self, opcodes: np.ndarray, caps: QueryCaps,
+                              stack_size: int, step_ranges: np.ndarray):
+        return ("sync", self.run_union_batch(opcodes, caps, stack_size,
+                                             step_ranges))
+
+    def harvest_batch(self, handle):
+        tag, payload = handle[0], handle[1:]
+        if tag == "sync":
+            return payload[0]
+        raise NotImplementedError(tag)
+
 
 class LocalBackend(ExecutionBackend):
     """Single-device execution over :class:`DeviceIndexArrays`."""
+
+    supports_union = True
 
     def __init__(self, arrays: DeviceIndexArrays, n_vertices: int):
         self.arrays = arrays
@@ -344,10 +542,34 @@ class LocalBackend(ExecutionBackend):
         return R.to_numpy(pairs), False
 
     def run_batch(self, shape, caps: QueryCaps, ranges: np.ndarray):
+        return self.harvest_batch(self.run_batch_async(shape, caps, ranges))
+
+    def run_union_batch(self, opcodes: np.ndarray, caps: QueryCaps,
+                        stack_size: int, step_ranges: np.ndarray):
+        return self.harvest_batch(self.run_union_batch_async(
+            opcodes, caps, stack_size, step_ranges))
+
+    def run_batch_async(self, shape, caps: QueryCaps, ranges: np.ndarray):
         rel, overflow = run_plan_batch(self.arrays, shape, caps,
                                        self.n_vertices, jnp.asarray(ranges))
+        # JAX dispatch is asynchronous: the device is now computing while
+        # the caller plans the next bucket; harvest_batch blocks.
+        return ("lanes", rel, overflow)
+
+    def run_union_batch_async(self, opcodes: np.ndarray, caps: QueryCaps,
+                              stack_size: int, step_ranges: np.ndarray):
+        rel, overflow = run_union_batch(
+            self.arrays, caps, stack_size, self.n_vertices,
+            jnp.asarray(opcodes, dtype=jnp.int32),
+            jnp.asarray(step_ranges, dtype=jnp.int32))
+        return ("lanes", rel, overflow)
+
+    def harvest_batch(self, handle):
+        if handle[0] != "lanes":
+            return super().harvest_batch(handle)
+        _, rel, overflow = handle
         overflow = np.asarray(overflow)
-        results: list = [None] * ranges.shape[0]
+        results: list = [None] * overflow.shape[0]
         ok = np.nonzero(~overflow)[0]
         if ok.size:
             for lane, rows in zip(ok, R.batch_to_numpy(rel, lanes=ok)):

@@ -29,11 +29,14 @@ import dataclasses
 import numpy as np
 
 from .backend import (  # noqa: F401  (QueryCaps/run_plan* are public API)
+    OP_NOP,
     ExecutionBackend,
     LocalBackend,
     QueryCaps,
     _join_pairs,
     default_caps,
+    plan_program,
+    program_ranges,
     run_plan,
     run_plan_batch,
 )
@@ -82,13 +85,39 @@ class LadderTelemetry:
     dispatches: int = 0
     retry_rungs: int = 0
     default_jumps: int = 0
+    union_lanes: int = 0  # lanes served through the union executable
 
     def snapshot(self) -> "LadderTelemetry":
         return dataclasses.replace(self)
 
     def reset(self) -> None:
         self.queries = self.dispatches = 0
-        self.retry_rungs = self.default_jumps = 0
+        self.retry_rungs = self.default_jumps = self.union_lanes = 0
+
+
+@dataclasses.dataclass
+class _Group:
+    """One dispatch unit of a batch: a same-shape bucket, or a union
+    group (``opcodes`` set, ``shape`` None) of mixed-shape stragglers."""
+
+    shape: object
+    caps: QueryCaps
+    members: list
+    ranges: np.ndarray
+    opcodes: np.ndarray | None = None
+    stack_size: int = 0
+    handle: object = None
+
+
+@dataclasses.dataclass
+class BatchHandle:
+    """In-flight batch: returned by :meth:`Engine.dispatch_batch`, settled
+    by :meth:`Engine.harvest_batch`.  Between the two calls the device is
+    executing every group while the host is free to plan the next batch —
+    the service's pipelined drain lives on exactly this gap."""
+
+    results: list
+    groups: list
 
 
 class Engine:
@@ -257,9 +286,20 @@ class Engine:
 
     def execute_batch(self, queries, caps: QueryCaps | None = None,
                       max_retries: int = 10, plans: list | None = None,
-                      min_bucket: int = 4) -> list:
+                      min_bucket: int = 4, union: bool = False) -> list:
         """Evaluate many queries; returns one (n, 2) array per query, in
-        input order.
+        input order.  Equivalent to ``dispatch_batch`` + ``harvest_batch``
+        back to back — callers that want to overlap host work with device
+        execution use the two halves directly."""
+        handle = self.dispatch_batch(queries, caps=caps, plans=plans,
+                                     min_bucket=min_bucket, union=union)
+        return self.harvest_batch(handle, max_retries=max_retries)
+
+    def dispatch_batch(self, queries, caps: QueryCaps | None = None,
+                       plans: list | None = None, min_bucket: int = 4,
+                       union: bool = False) -> BatchHandle:
+        """Plan, bucket and asynchronously dispatch a batch; returns a
+        :class:`BatchHandle` the caller settles with ``harvest_batch``.
 
         Queries are grouped by (plan *shape*, estimated caps) — labels
         don't change the executable, and the power-of-two capacity
@@ -268,14 +308,18 @@ class Engine:
         than ``min_bucket`` merge upward into the next-larger caps rung
         (one dispatch beats a little lane padding).  Each group's lookup
         ranges stack into a (batch, n_lookups, 2) array evaluated by the
-        backend (one vmapped dispatch on the local backend).  Overflow is
-        tracked per lane: only the queries whose own sticky flag tripped
-        are retried, at doubled capacities.
+        backend (one vmapped dispatch on the local backend).
+
+        With ``union=True`` (and a backend that supports it), the
+        *mixed-shape* straggler buckets still smaller than ``min_bucket``
+        after same-shape merging fuse into one union-executable group —
+        their per-lane programs stream as data — instead of serializing
+        into one dispatch per leftover shape.
 
         ``plans`` lets a caller with a plan cache (the service layer)
         skip re-planning; must align with ``queries``."""
         if not queries:
-            return []
+            return BatchHandle(results=[], groups=[])
         if plans is None:
             plans = [self.plan(q) for q in queries]
         all_ranges = [self.lookup_ranges(p) for p in plans]
@@ -314,14 +358,75 @@ class Engine:
                 # than inflating an already-flushed smaller bucket
                 work.append((shape, cur_caps, cur_members))
 
-        results: list = [None] * len(queries)
+        groups = [_Group(shape, c, m, np.stack([all_ranges[i] for i in m]))
+                  for shape, c, m in work]
+        if union and self.backend.supports_union:
+            groups = self._fuse_stragglers(groups, all_ranges, min_bucket)
+
         self.telemetry.queries += len(queries)
-        for shape, grp_caps, members in work:
-            pending = np.asarray(members, np.int64)
-            ranges = np.stack([all_ranges[i] for i in members])
-            for attempt in range(max_retries):
-                self.telemetry.dispatches += 1
-                rows, overflow = self.backend.run_batch(shape, grp_caps, ranges)
+        for g in groups:
+            self.telemetry.dispatches += 1
+            g.handle = self._dispatch_group(g)
+        return BatchHandle(results=[None] * len(queries), groups=groups)
+
+    def _fuse_stragglers(self, groups: list, all_ranges: list,
+                         min_bucket: int) -> list:
+        """Fuse the sub-``min_bucket`` shape buckets into one union group
+        (caps = elementwise max, programs NOP-padded to the longest)."""
+        stragglers = [g for g in groups if len(g.members) < min_bucket]
+        if len(stragglers) < 2:
+            return groups
+        kept = [g for g in groups if len(g.members) >= min_bucket]
+        programs = {}
+        members, progs, ucaps = [], [], None
+        for g in stragglers:
+            if g.shape not in programs:
+                programs[g.shape] = plan_program(g.shape)
+            for i in g.members:
+                members.append(i)
+                progs.append(programs[g.shape])
+            ucaps = g.caps if ucaps is None else QueryCaps(
+                max(ucaps.class_cap, g.caps.class_cap),
+                max(ucaps.pair_cap, g.caps.pair_cap),
+                max(ucaps.join_cap, g.caps.join_cap))
+        n_steps = max(len(p) for p, _ in progs)
+        stack_size = max(2, max(d for _, d in progs))
+        opcodes = np.full((len(members), n_steps), OP_NOP, np.int32)
+        step_ranges = np.zeros((len(members), n_steps, 2), np.int32)
+        for lane, (i, (prog, _)) in enumerate(zip(members, progs)):
+            opcodes[lane, : len(prog)] = prog
+            step_ranges[lane] = program_ranges(prog, all_ranges[i], n_steps)
+        self.telemetry.union_lanes += len(members)
+        kept.append(_Group(None, ucaps, members, step_ranges,
+                           opcodes=opcodes, stack_size=stack_size))
+        return kept
+
+    def _dispatch_group(self, g: _Group):
+        if g.opcodes is not None:
+            return self.backend.run_union_batch_async(
+                g.opcodes, g.caps, g.stack_size, g.ranges)
+        return self.backend.run_batch_async(g.shape, g.caps, g.ranges)
+
+    def harvest_batch(self, handle: BatchHandle,
+                      max_retries: int = 10) -> list:
+        """Block on a dispatched batch and drive the overflow ladder.
+
+        Overflow is tracked per lane: only the queries whose own sticky
+        flag tripped are retried (synchronously), at doubled capacities.
+        ``retry_rungs`` and ``default_jumps`` both count per lane — a
+        4-lane bucket that jumps to default caps records 4 jumps, the
+        same as 4 single-query executes would."""
+        results = handle.results
+        for g in handle.groups:
+            if max_retries <= 0:
+                raise RuntimeError("query overflow not resolved after retries")
+            pending = np.asarray(g.members, np.int64)
+            ranges = g.ranges
+            opcodes = g.opcodes
+            grp_caps = g.caps
+            rows, overflow = self.backend.harvest_batch(g.handle)
+            attempt = 0
+            while True:
                 for lane, r in enumerate(rows):
                     if r is not None:
                         results[pending[lane]] = r
@@ -329,11 +434,21 @@ class Engine:
                     break
                 # only the lanes whose own flag tripped climb a rung
                 self.telemetry.retry_rungs += int(overflow.sum())
+                if attempt >= 3:
+                    self.telemetry.default_jumps += int(overflow.sum())
+                grp_caps = self._escalate(grp_caps, attempt)
+                attempt += 1
+                if attempt >= max_retries:
+                    raise RuntimeError(
+                        "query overflow not resolved after retries")
                 pending = pending[overflow]
                 ranges = ranges[overflow]
-                grp_caps = self._escalate(grp_caps, attempt)
-                if attempt >= 3:
-                    self.telemetry.default_jumps += 1
-            else:
-                raise RuntimeError("query overflow not resolved after retries")
+                self.telemetry.dispatches += 1
+                if opcodes is not None:
+                    opcodes = opcodes[overflow]
+                    rows, overflow = self.backend.run_union_batch(
+                        opcodes, grp_caps, g.stack_size, ranges)
+                else:
+                    rows, overflow = self.backend.run_batch(
+                        g.shape, grp_caps, ranges)
         return results

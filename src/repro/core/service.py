@@ -26,8 +26,35 @@ decoding; this module adapts it to CPQ serving on top of
   cached answer for older epochs becomes unreachable (aging out of the
   LRU naturally).
 * **admission/flush policy** — the queue admits up to ``max_batch``
-  requests; submitting past that point flushes synchronously.  ``query``
-  is the one-shot convenience wrapper (submit + flush).
+  requests; submitting past that point flushes synchronously (unless
+  ``auto_flush=False``, for callers that drive the drain themselves).
+  ``query`` is the one-shot convenience wrapper (submit + flush).
+
+Multi-tenant serving (PR 7): every request carries a ``tenant`` id
+(defaulting to :data:`~repro.core.workload.DEFAULT_TENANT`), and
+
+* **admission control** — with ``max_queue`` (and optionally
+  ``max_queue_per_tenant``) set, a submit that would overflow the queue
+  is *explicitly rejected*: the returned request comes back
+  ``shed=True, done=True, result=None`` and is counted in per-tenant
+  shed stats.  The shed decision happens only at ``submit`` — once a
+  request is accepted it is never silently dropped: a failed flush
+  requeues it, and it completes or the failure propagates.
+* **fair drain** — ``flush`` drains the queue in rounds of at most
+  ``max_batch``, selecting round-robin across tenants (submit order
+  within a tenant), so one hot tenant cannot starve the rest no matter
+  how it floods the queue.
+* **pipelined drain** — each round is dispatched asynchronously
+  (``Engine.dispatch_batch``) and the *next* round's host work (cache
+  re-check, dedup, planning, capacity estimation) overlaps the device
+  execution before the earlier round is harvested.  Cache re-check is
+  per round: duplicates across in-flight rounds may execute twice (a
+  deliberate trade of cross-round dedup for overlap); duplicates within
+  a round always fold.
+* **union dispatch** — with ``union=True`` the engine fuses leftover
+  sub-``min_bucket`` shape buckets into one union-executable dispatch
+  (``core.backend.run_union_batch``), so heterogeneous tenant traffic
+  stops serializing into per-shape dispatches.
 
 A graph update re-enters the service two ways:
 
@@ -43,8 +70,12 @@ A graph update re-enters the service two ways:
   query drain applies every queued update as ONE
   ``MaintainableIndex.apply_updates`` batch (one affected-pair union BFS)
   followed by ONE flush/rebind.  Reads submitted before a write are
-  drained first, so the service serves a strict serializable history:
-  every query sees exactly the writes applied before it was submitted.
+  drained first — by ``apply_updates``, ``rebind`` AND ``adapt`` (an
+  adaptation round is a write like any other; it draining the queue
+  first is what PR 7's serializability fix restored) — so the service
+  serves a serializable history: every query sees exactly the writes
+  *accepted* before it was submitted, including queued-but-undrained
+  ones, and never a later write.
 
 Since PR 5 the write path also carries **interest updates** (Sec. V-C):
 ``("insert_interest", seq)`` / ``("delete_interest", seq)`` ops — from a
@@ -79,6 +110,7 @@ looks at the backend.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 
 import numpy as np
@@ -86,6 +118,7 @@ import numpy as np
 from .engine import Engine, QueryCaps
 from .index import CPQxIndex
 from .query import CPQ, plan_shape
+from .workload import DEFAULT_TENANT
 
 
 _GRAPH_OPS = frozenset({"insert_edge", "delete_edge", "change_label",
@@ -100,9 +133,27 @@ class QueryRequest:
 
     rid: int
     query: CPQ
+    tenant: str = DEFAULT_TENANT
     result: np.ndarray | None = None
     done: bool = False
     from_cache: bool = False
+    shed: bool = False  # rejected by admission control at submit
+    voted: bool = False  # already credited to the workload sketch
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        """Seconds from submit to completion (0.0 while in flight)."""
+        return max(0.0, self.t_done - self.t_submit)
+
+
+@dataclasses.dataclass
+class TenantStats:
+    submitted: int = 0
+    served: int = 0
+    shed: int = 0  # rejected at submit by admission control
+    cache_hits: int = 0
 
 
 @dataclasses.dataclass
@@ -113,6 +164,8 @@ class ServiceStats:
     executed: int = 0  # queries that reached the device
     deduped: int = 0  # in-flight duplicates folded into one execution
     flushes: int = 0
+    drain_rounds: int = 0  # fair-share rounds across all flushes
+    shed: int = 0  # requests rejected at submit (queue full)
     shape_buckets: int = 0  # distinct plan shapes across all flushes (the
     # device may dispatch more often: caps buckets and overflow retries)
     plan_hits: int = 0
@@ -125,6 +178,25 @@ class ServiceStats:
     adapt_rounds: int = 0  # AdaptationController.propose invocations
     interests_inserted: int = 0  # mined interest insertions drained
     interests_deleted: int = 0  # mined interest deletions drained
+    tenants: dict = dataclasses.field(default_factory=dict)
+
+    def tenant(self, name: str) -> TenantStats:
+        ts = self.tenants.get(name)
+        if ts is None:
+            ts = self.tenants[name] = TenantStats()
+        return ts
+
+
+@dataclasses.dataclass
+class _Round:
+    """One fair-share drain round in flight through the engine."""
+
+    reqs: list  # every request taken this round (incl. cache hits)
+    todo: list  # the subset needing device execution
+    by_query: dict
+    queries: list
+    plans: list
+    handle: object = None
 
 
 class QueryService:
@@ -133,13 +205,23 @@ class QueryService:
     def __init__(self, engine: Engine, *, max_batch: int = 64,
                  result_cache_size: int = 1024, plan_cache_size: int = 256,
                  caps: QueryCaps | None = None, max_retries: int = 10,
-                 maintainer=None, adapter=None, adapt_interval: int = 64):
+                 maintainer=None, adapter=None, adapt_interval: int = 64,
+                 max_queue: int | None = None,
+                 max_queue_per_tenant: int | None = None,
+                 auto_flush: bool = True, union: bool = False):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
         self.max_batch = max_batch
         self.caps = caps
         self.max_retries = max_retries
+        # admission control: None = unbounded (the legacy behavior).
+        # With auto_flush the queue never exceeds max_batch, so bounds
+        # matter to callers that burst-submit with auto_flush=False.
+        self.max_queue = max_queue
+        self.max_queue_per_tenant = max_queue_per_tenant
+        self.auto_flush = auto_flush
+        self.union = union  # fuse straggler shape buckets per round
         self.graph_epoch = 0
         self.stats = ServiceStats()
         self.maintainer = maintainer  # MaintainableIndex enabling the write path
@@ -162,6 +244,8 @@ class QueryService:
         self._ckpt_step = 0  # next checkpoint step id (monotone)
         self._planned_since_adapt = 0
         self._rungs_seen = engine.telemetry.retry_rungs
+        self._flushing = False  # reentrancy guard for the pipelined drain
+        self._adapting = False  # reentrancy guard for adapt()
         self._queue: list[QueryRequest] = []
         self._pending_updates: list = []
         self._results: OrderedDict = OrderedDict()  # (epoch, query) -> rows
@@ -173,94 +257,218 @@ class QueryService:
     # request lifecycle
     # ------------------------------------------------------------------ #
 
-    def submit(self, query: CPQ) -> QueryRequest:
-        """Enqueue a query.  Served straight from the result cache when
-        possible; otherwise it completes on the next flush (which happens
-        automatically once the queue holds ``max_batch`` requests)."""
-        req = QueryRequest(self._next_rid, query)
+    def submit(self, query: CPQ,
+               tenant: str = DEFAULT_TENANT) -> QueryRequest:
+        """Enqueue a query for ``tenant``.  Served straight from the
+        result cache when possible; rejected (``shed=True, done=True,
+        result=None``) when admission control finds the queue full;
+        otherwise it completes on the next flush (which happens
+        automatically once the queue holds ``max_batch`` requests, unless
+        ``auto_flush=False``)."""
+        req = QueryRequest(self._next_rid, query, tenant=tenant,
+                           t_submit=time.perf_counter())
         self._next_rid += 1
         self.stats.submitted += 1
+        tstats = self.stats.tenant(tenant)
+        tstats.submitted += 1
         cached = self._cache_get(query)
         if cached is not None:
             req.result, req.done, req.from_cache = cached, True, True
+            req.t_done = time.perf_counter()
             self.stats.cache_hits += 1
             self.stats.served += 1
-            # a cache hit never reaches _plan, but it IS workload: a hot
-            # template must keep voting while it is being served for
-            # free, or the sketch would starve exactly when a sequence
-            # is hottest
-            self._observe(query)
+            tstats.cache_hits += 1
+            tstats.served += 1
+            # a cache hit never reaches the planner, but it IS workload:
+            # a hot template must keep voting while it is being served
+            # for free, or the sketch would starve exactly when a
+            # sequence is hottest
+            self._observe(query, tenant=tenant)
+            req.voted = True
             self._maybe_adapt()
             return req
+        if not self._admit(req):
+            # explicit shed at the door: the caller learns immediately,
+            # and an *accepted* request is never dropped later
+            req.shed, req.done = True, True
+            req.t_done = time.perf_counter()
+            self.stats.shed += 1
+            tstats.shed += 1
+            return req
         self._queue.append(req)
-        if len(self._queue) >= self.max_batch:
+        if self.auto_flush and len(self._queue) >= self.max_batch:
             self.flush()
         return req
 
-    def flush(self) -> list[QueryRequest]:
-        """Execute everything queued and return the completed requests.
+    def _admit(self, req: QueryRequest) -> bool:
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            return False
+        if self.max_queue_per_tenant is not None:
+            held = sum(r.tenant == req.tenant for r in self._queue)
+            if held >= self.max_queue_per_tenant:
+                return False
+        return True
 
-        Duplicate queries in the queue collapse onto one execution, and
-        the engine groups the distinct ones by plan shape — each shape
-        bucket is a single vmapped device dispatch.  Queued graph updates
-        (``apply_updates``) are drained first, so every query in this
-        flush is answered on the post-update index."""
-        self._drain_updates()
-        batch, self._queue = self._queue, []
-        if not batch:
+    def flush(self) -> list[QueryRequest]:
+        """Drain the whole queue and return the completed requests.
+
+        The drain runs in fair-share rounds of at most ``max_batch``:
+        requests are picked round-robin across tenants (submit order
+        within each tenant), duplicates within a round collapse onto one
+        execution, and the engine groups the distinct queries by plan
+        shape — each shape bucket is one vmapped device dispatch.  The
+        rounds are *pipelined*: round N+1's host-side work (cache
+        re-check, dedup, planning, capacity estimation) overlaps round
+        N's device execution, riding JAX's async dispatch.
+
+        Queued updates (``apply_updates`` / adaptation proposals) are
+        drained first, so every query in this flush is answered on the
+        post-update index.  On an engine failure every not-yet-completed
+        request is requeued — accepted requests are never lost."""
+        if self._flushing:
             return []
-        self.stats.flushes += 1
-        # re-check the cache (an earlier flush may have answered a dup)
+        self._flushing = True
+        completed: list[QueryRequest] = []
+        inflight: _Round | None = None
+        nxt: _Round | None = None
+        took = False
+        try:
+            self._drain_updates()
+            while True:
+                nxt = self._prepare_round()
+                if nxt is None and inflight is None:
+                    break
+                took = took or nxt is not None
+                if nxt is not None:
+                    self._dispatch_round(nxt)
+                if inflight is not None:
+                    completed.extend(self._finalize_round(inflight))
+                inflight, nxt = nxt, None
+        except Exception:
+            requeue = [r for rnd in (inflight, nxt) if rnd is not None
+                       for r in rnd.todo if not r.done]
+            self._queue = requeue + self._queue
+            raise
+        finally:
+            self._flushing = False
+        if took:
+            self.stats.flushes += 1
+            self._maybe_adapt()
+        return completed
+
+    def _take_round(self) -> list[QueryRequest]:
+        """Pick up to ``max_batch`` queued requests, round-robin across
+        tenants in first-arrival order (submit order within a tenant) —
+        the fairness half of admission control: a tenant flooding the
+        queue only delays itself."""
+        if not self._queue:
+            return []
+        by_tenant: OrderedDict = OrderedDict()
+        for r in self._queue:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        lanes = list(by_tenant.values())
+        take: list[QueryRequest] = []
+        depth = 0
+        while len(take) < self.max_batch:
+            advanced = False
+            for lane in lanes:
+                if depth < len(lane):
+                    take.append(lane[depth])
+                    advanced = True
+                    if len(take) >= self.max_batch:
+                        break
+            if not advanced:
+                break
+            depth += 1
+        taken = {id(r) for r in take}
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        return take
+
+    def _prepare_round(self) -> _Round | None:
+        """Host-side half of one drain round: cache re-check, dedup,
+        voting, planning.  Runs while the previous round executes on
+        device."""
+        batch = self._take_round()
+        if not batch:
+            return None
+        self.stats.drain_rounds += 1
         todo: list[QueryRequest] = []
         for req in batch:
             cached = self._cache_get(req.query)
             if cached is not None:
                 req.result, req.done, req.from_cache = cached, True, True
+                req.t_done = time.perf_counter()
                 self.stats.cache_hits += 1
-                self._observe(req.query)  # served for free, still votes
+                self.stats.tenant(req.tenant).cache_hits += 1
+                if not req.voted:
+                    self._observe(req.query, tenant=req.tenant)
+                    req.voted = True  # served for free, still votes once
             else:
                 todo.append(req)
         by_query: dict = {}
         for req in todo:
             by_query.setdefault(req.query, []).append(req)
         queries = list(by_query)
-        if queries:
-            # _plan votes once per distinct query; folded duplicates are
-            # workload too — credit them, or a template submitted N
-            # times per flush would earn 1/N of its true frequency
-            for q, reqs in by_query.items():
-                if len(reqs) > 1:
-                    self._observe(q, weight=len(reqs) - 1, tick=False)
-            plans = [self._plan(q) for q in queries]
-            try:
-                rows = self.engine.execute_batch(
-                    queries, caps=self.caps, max_retries=self.max_retries,
-                    plans=plans)
-            except Exception:
-                # nothing completed: requeue so the requests aren't lost
-                self._queue = todo + self._queue
-                raise
-            self.stats.shape_buckets += len({plan_shape(p) for p in plans})
-            self.stats.executed += len(queries)
-            self.stats.deduped += len(todo) - len(queries)
-            for q, res in zip(queries, rows):
+        # votes are idempotent per REQUEST (the ``voted`` flag): a round
+        # requeued by an engine failure re-plans on retry but cannot
+        # vote again, so flaky traffic no longer inflates the sketch.
+        # Folded duplicates are workload too — each unvoted request
+        # credits its own tenant, or a template submitted N times per
+        # round would earn 1/N of its true frequency.
+        for q, reqs in by_query.items():
+            fresh = [r for r in reqs if not r.voted]
+            per_tenant: OrderedDict = OrderedDict()
+            for r in fresh:
+                per_tenant[r.tenant] = per_tenant.get(r.tenant, 0) + 1
+                r.voted = True
+            first = True
+            for t, w in per_tenant.items():
+                self._observe(q, weight=w, tick=first, tenant=t)
+                first = False
+        plans = [self._plan(q) for q in queries]
+        return _Round(batch, todo, by_query, queries, plans)
+
+    def _dispatch_round(self, rnd: _Round) -> None:
+        if rnd.queries:
+            rnd.handle = self.engine.dispatch_batch(
+                rnd.queries, caps=self.caps, plans=rnd.plans,
+                union=self.union)
+
+    def _finalize_round(self, rnd: _Round) -> list[QueryRequest]:
+        """Device-side half: harvest the dispatched round (driving the
+        overflow ladder), publish results to caches and requests."""
+        if rnd.queries:
+            rows = self.engine.harvest_batch(rnd.handle,
+                                             max_retries=self.max_retries)
+            self.stats.shape_buckets += len({plan_shape(p)
+                                             for p in rnd.plans})
+            self.stats.executed += len(rnd.queries)
+            self.stats.deduped += len(rnd.todo) - len(rnd.queries)
+            now = time.perf_counter()
+            for q, res in zip(rnd.queries, rows):
                 self._cache_put(q, res)
-                for req in by_query[q]:
-                    req.result, req.done = res, True
+                for req in rnd.by_query[q]:
+                    req.result, req.done, req.t_done = res, True, now
             # ladder telemetry: fold the engine's rung delta into the
             # service view (estimator health is a serving-layer signal)
             rungs = self.engine.telemetry.retry_rungs
             self.stats.retry_rungs += rungs - self._rungs_seen
             self._rungs_seen = rungs
-        self.stats.served += len(batch)
-        self._maybe_adapt()
-        return batch
+        self.stats.served += len(rnd.reqs)
+        for req in rnd.reqs:
+            self.stats.tenant(req.tenant).served += 1
+        return rnd.reqs
 
-    def query(self, query: CPQ) -> np.ndarray:
-        """One-shot convenience: submit + flush, returns the (n, 2) rows."""
-        req = self.submit(query)
+    def query(self, query: CPQ, tenant: str = DEFAULT_TENANT) -> np.ndarray:
+        """One-shot convenience: submit + flush, returns the (n, 2) rows.
+        Raises if admission control shed the request (one-shot callers
+        have no request handle to poll)."""
+        req = self.submit(query, tenant=tenant)
         if not req.done:
             self.flush()
+        if req.shed:
+            raise RuntimeError(
+                "request shed by admission control — the queue is full")
         return req.result
 
     @property
@@ -449,6 +657,14 @@ class QueryService:
         one flush, one rebind, one epoch bump — with whatever else is
         queued at the next query drain).  Returns the proposed ops.
 
+        An adaptation round is a *write*: like ``apply_updates`` it
+        drains queued reads first, so a read submitted before the round
+        executes on the pre-adaptation index (interest swaps are
+        answer-preserving, but the serializable history must hold at
+        the execution level too — a queued read must never run against
+        state from a later-accepted write).  Re-entrant calls (the
+        drain's own traffic re-triggering ``_maybe_adapt``) are no-ops.
+
         Called automatically from ``flush`` every ``adapt_interval``
         planned queries; callable directly for checkpoint-style control
         (benchmarks, tests)."""
@@ -457,25 +673,33 @@ class QueryService:
                 "no adapter bound — construct the service with "
                 "QueryService(engine, maintainer=..., "
                 "adapter=AdaptationController(k))")
-        self._planned_since_adapt = 0
-        self.stats.adapt_rounds += 1
-        ops = self.adapter.propose(
-            self.engine.stats, self.maintainer.index.interests)
-        # the queue invariant holds for the controller too: a proposal
-        # the mirror would reject (e.g. mined from a query over labels
-        # outside the alphabet) is dropped, never queued — one bad
-        # proposal must not poison every later coalesced round
-        valid = []
-        for op in ops:
-            try:
-                self._check_interest_op(op)
-            except ValueError:
-                continue
-            valid.append(op)
-        if valid:
-            self._pending_updates.extend(valid)
-            self.bump_epoch()
-        return valid
+        if self._adapting:
+            return []
+        self._adapting = True
+        try:
+            if self._queue:
+                self.flush()  # reads before the round see the old index
+            self._planned_since_adapt = 0
+            self.stats.adapt_rounds += 1
+            ops = self.adapter.propose(
+                self.engine.stats, self.maintainer.index.interests)
+            # the queue invariant holds for the controller too: a proposal
+            # the mirror would reject (e.g. mined from a query over labels
+            # outside the alphabet) is dropped, never queued — one bad
+            # proposal must not poison every later coalesced round
+            valid = []
+            for op in ops:
+                try:
+                    self._check_interest_op(op)
+                except ValueError:
+                    continue
+                valid.append(op)
+            if valid:
+                self._pending_updates.extend(valid)
+                self.bump_epoch()
+            return valid
+        finally:
+            self._adapting = False
 
     # ------------------------------------------------------------------ #
     # caches
@@ -498,22 +722,22 @@ class QueryService:
         while len(self._results) > self._result_cache_size:
             self._results.popitem(last=False)
 
-    def _observe(self, query: CPQ, weight: float = 1.0,
-                 tick: bool = True) -> None:
-        """Feed one served query into the adaptation sketch (``weight``
-        credits folded duplicates; ``tick`` advances the adapt-interval
-        clock)."""
+    def _observe(self, query: CPQ, weight: float = 1.0, tick: bool = True,
+                 tenant: str = DEFAULT_TENANT) -> None:
+        """Feed one served query into its tenant's adaptation sketch
+        (``weight`` credits folded duplicates; ``tick`` advances the
+        adapt-interval clock)."""
         if self.adapter is None:
             return
-        self.stats.sequences_observed += self.adapter.observe(query, weight)
+        self.stats.sequences_observed += self.adapter.observe(
+            query, weight, tenant=tenant)
         if tick:
             self._planned_since_adapt += 1
 
     def _plan(self, query: CPQ):
-        # every planned query votes, plan-cache hit or miss — a hot
-        # template repeating within one epoch is exactly the frequency
-        # signal the sketch exists to catch
-        self._observe(query)
+        # planning is pure: voting happens per REQUEST in the drain
+        # (``_prepare_round``), guarded by the ``voted`` flag, so a
+        # requeued-and-replanned round cannot inflate the sketch
         key = (self.graph_epoch, query)
         if key in self._plans:
             self._plans.move_to_end(key)

@@ -37,6 +37,16 @@ evaluation with and without its index entry.  Three pieces:
   few rounds, and the sketch decays geometrically each round so a
   drifted-away workload releases its slots.
 
+The controller is **multi-tenant** (PR 7): every tenant gets its own
+Space-Saving sketch (one tenant's burst cannot evict another tenant's
+counters) and its own ``cfg.budget`` of mined interests, while
+``cfg.pair_budget`` stays one *global* footprint cap.  :meth:`propose`
+arbitrates round-robin across tenants in deterministic (sorted-name)
+order, one admission per tenant per pass, so a hot tenant cannot claim
+the whole pair budget before a cold tenant's first candidate is even
+considered.  A single-tenant deployment (everything funnels through
+``DEFAULT_TENANT``) behaves exactly as before.
+
 The controller never touches the index itself — it only *proposes* ops;
 ``QueryService`` drains them through its existing write path, so an
 adaptation round shares one mirror batch + one flush/rebind + one epoch
@@ -57,6 +67,9 @@ import numpy as np
 from .optimizer import estimate_plan
 from .query import CPQ, Conj, Edge, Identity, Join, _flatten_join
 from .stats import IndexStats
+
+#: the tenant every untagged request is accounted to.
+DEFAULT_TENANT = "default"
 
 
 # ---------------------------------------------------------------------- #
@@ -312,22 +325,43 @@ class AdaptationController:
     Stateless about the index itself: every :meth:`propose` call reads
     the *current* interest set and statistics, so the controller is
     correct under concurrent graph maintenance (a graph update changes
-    the statistics; the next round simply re-prices)."""
+    the statistics; the next round simply re-prices).
+
+    Sketches are per tenant (created lazily on first observe); the
+    legacy ``.sketch`` attribute remains the :data:`DEFAULT_TENANT`
+    view, so single-tenant callers and tests are unaffected."""
 
     def __init__(self, k: int, sketch_capacity: int = 256,
                  config: AdaptationConfig | None = None):
         self.k = k
         self.cfg = config or AdaptationConfig()
-        self.sketch = WorkloadSketch(sketch_capacity)
+        self.sketch_capacity = sketch_capacity
+        self.sketches: dict = {}  # tenant -> WorkloadSketch
         self.rounds = 0
         self._dwell: dict = {}  # seq -> protected-until round
 
+    @property
+    def sketch(self) -> WorkloadSketch:
+        return self.sketch_for(DEFAULT_TENANT)
+
+    @sketch.setter
+    def sketch(self, sk: WorkloadSketch) -> None:
+        self.sketches[DEFAULT_TENANT] = sk
+
+    def sketch_for(self, tenant: str) -> WorkloadSketch:
+        sk = self.sketches.get(tenant)
+        if sk is None:
+            sk = self.sketches[tenant] = WorkloadSketch(self.sketch_capacity)
+        return sk
+
     # -------------------------- recording --------------------------- #
 
-    def observe(self, q: CPQ, weight: float = 1.0) -> int:
-        """Record one served query (``weight`` > 1 credits folded
-        duplicate requests); returns sequences credited."""
-        return self.sketch.observe_query(q, self.k, weight)
+    def observe(self, q: CPQ, weight: float = 1.0,
+                tenant: str = DEFAULT_TENANT) -> int:
+        """Record one served query against its tenant's sketch
+        (``weight`` > 1 credits folded duplicate requests); returns
+        sequences credited."""
+        return self.sketch_for(tenant).observe_query(q, self.k, weight)
 
     # -------------------------- proposing --------------------------- #
 
@@ -337,53 +371,96 @@ class AdaptationController:
         moving the mined interest set toward the current workload's
         top-benefit sequences, under the budget and hysteresis rules.
 
+        Budgeting is per tenant for counts (each tenant may hold up to
+        ``cfg.budget`` mined interests) and global for the pair
+        footprint: admission round-robins across tenants in sorted-name
+        order, one admission per tenant per pass, each tenant offering
+        its own benefit-ranked candidates, until every tenant is out of
+        budget, candidates, or global pair headroom.  A sequence two
+        tenants both want is admitted once and charged to whichever
+        tenant's turn came first — the others benefit free of charge.
+
         ``current_interests`` is the live interest set (length-1
         sequences are implicit in iaCPQx and ignored here)."""
         cfg = self.cfg
         self.rounds += 1
         model = BenefitModel(stats)
         resident = {tuple(s) for s in current_interests if len(s) >= 2}
+        if not self.sketches:
+            self.sketch_for(DEFAULT_TENANT)
+        tenants = sorted(self.sketches)
 
-        scored: dict = {}
-        for seq, cnt, err in self.sketch.heavy_hitters(cfg.min_count):
-            if len(seq) < 2 or len(seq) > self.k:
-                continue
-            if cnt - err < cfg.min_count:  # Space-Saving precision
-                continue  # guard: the count may be inherited, not earned
-            scored[seq] = model.benefit(seq, cnt)
-        for seq in resident:  # faded residents still get priced
-            if seq not in scored:
-                scored[seq] = model.benefit(seq, self.sketch.count(seq))
+        scored_by_tenant: dict = {}
+        for tenant in tenants:
+            sk = self.sketches[tenant]
+            scored: dict = {}
+            for seq, cnt, err in sk.heavy_hitters(cfg.min_count):
+                if len(seq) < 2 or len(seq) > self.k:
+                    continue
+                if cnt - err < cfg.min_count:  # Space-Saving precision
+                    continue  # guard: the count may be inherited, not earned
+                scored[seq] = model.benefit(seq, cnt)
+            for seq in resident:  # faded residents still get priced
+                if seq not in scored:
+                    scored[seq] = model.benefit(seq, sk.count(seq))
+            scored_by_tenant[tenant] = scored
 
         protected = {s for s in resident
                      if self._dwell.get(s, -1) >= self.rounds}
-        # hysteresis: residents defend their slot with a swap_margin
-        # premium; challengers must clear both floors
-        def rank(seq):
-            bonus = cfg.swap_margin if seq in resident else 1.0
-            return (-scored[seq] * bonus, repr(seq))
 
-        eligible = [s for s, b in scored.items()
-                    if s in protected
-                    or (b >= cfg.min_benefit
-                        and (s in resident
-                             or self.sketch.guaranteed(s)
-                             >= cfg.min_count))]
-        # dwell-protected residents claim their slots first, then the
-        # margin-weighted benefit order decides the rest
-        eligible.sort(key=lambda s: (s not in protected, rank(s)))
+        def eligible_for(tenant):
+            sk = self.sketches[tenant]
+            scored = scored_by_tenant[tenant]
 
+            # hysteresis: residents defend their slot with a swap_margin
+            # premium; challengers must clear both floors
+            def rank(seq):
+                bonus = cfg.swap_margin if seq in resident else 1.0
+                return (-scored[seq] * bonus, repr(seq))
+
+            elig = [s for s, b in scored.items()
+                    if s not in protected
+                    and b >= cfg.min_benefit
+                    and (s in resident
+                         or sk.guaranteed(s) >= cfg.min_count)]
+            elig.sort(key=rank)
+            return elig
+
+        # dwell-protected residents keep their slots unconditionally,
+        # charged to the tenant that drives them hardest
         desired: set = set()
         pair_spend = 0.0
-        for seq in eligible:
-            if len(desired) >= cfg.budget:
-                break
-            cost = model.est_pairs(seq)
-            if (cfg.pair_budget is not None and seq not in protected
-                    and pair_spend + cost > cfg.pair_budget):
-                continue
-            desired.add(seq)
-            pair_spend += cost
+        spent = {t: 0 for t in tenants}
+        for s in sorted(protected, key=repr):
+            payer = max(tenants, key=lambda t: self.sketches[t].count(s))
+            desired.add(s)
+            pair_spend += model.est_pairs(s)
+            spent[payer] += 1
+
+        elig = {t: eligible_for(t) for t in tenants}
+        cursor = {t: 0 for t in tenants}
+        progressed = True
+        while progressed:
+            progressed = False
+            for t in tenants:
+                if spent[t] >= cfg.budget:
+                    continue
+                lst, i = elig[t], cursor[t]
+                while i < len(lst):
+                    seq = lst[i]
+                    i += 1
+                    if seq in desired:
+                        continue
+                    cost = model.est_pairs(seq)
+                    if (cfg.pair_budget is not None
+                            and pair_spend + cost > cfg.pair_budget):
+                        continue
+                    desired.add(seq)
+                    pair_spend += cost
+                    spent[t] += 1
+                    progressed = True
+                    break
+                cursor[t] = i
 
         ops = [("delete_interest", s)
                for s in sorted(resident - desired, key=repr)]
@@ -393,32 +470,42 @@ class AdaptationController:
             self._dwell[s] = self.rounds + cfg.dwell
         for s in resident - desired:
             self._dwell.pop(s, None)
-        self.sketch.decay(cfg.decay)
+        for sk in self.sketches.values():
+            sk.decay(cfg.decay)
         return ops
 
     # --------------------- checkpoint codec ------------------------- #
 
     def export_state(self) -> dict:
-        """Flat numpy snapshot of the whole adaptation loop — sketch,
-        round counter, dwell protections, and config — so a restored
-        replica keeps adapting where the donor stopped (no cold-start
-        thrash of the interest set)."""
+        """Flat numpy snapshot of the whole adaptation loop — per-tenant
+        sketches, round counter, dwell protections, and config — so a
+        restored replica keeps adapting where the donor stopped (no
+        cold-start thrash of the interest set).  Tenant names travel as
+        one newline-joined UTF-8 byte leaf (names may not contain
+        newlines); sketch leaves are keyed ``sketch<i>.*`` in sorted
+        tenant order."""
         cfg = self.cfg
         dwell_rows = [list(s) + [-1] * (self.k - len(s)) + [int(r)]
                       for s, r in self._dwell.items()]
-        sk = self.sketch.export_state(self.k)
-        return {
-            "meta": np.array([self.k, self.sketch.capacity, self.rounds],
-                             np.int64),
+        names = sorted(self.sketches)
+        out = {
+            "meta": np.array(
+                [self.k, self.sketch_capacity, self.rounds, len(names)],
+                np.int64),
             "config": np.array(
                 [cfg.budget,
                  -1.0 if cfg.pair_budget is None else cfg.pair_budget,
                  cfg.min_count, cfg.min_benefit, cfg.swap_margin,
                  cfg.dwell, cfg.decay], np.float64),
-            "sketch.meta": sk["meta"],
-            "sketch.rows": sk["rows"],
+            "tenants": np.frombuffer(
+                "\n".join(names).encode("utf-8"), np.uint8).copy(),
             "dwell": np.asarray(dwell_rows, np.int64).reshape(-1, self.k + 1),
         }
+        for i, t in enumerate(names):
+            sk = self.sketches[t].export_state(self.k)
+            out[f"sketch{i}.meta"] = sk["meta"]
+            out[f"sketch{i}.rows"] = sk["rows"]
+        return out
 
     @classmethod
     def from_state(cls, state: dict) -> "AdaptationController":
@@ -432,8 +519,15 @@ class AdaptationController:
             swap_margin=float(c[4]), dwell=int(c[5]), decay=float(c[6]))
         ctl = cls(k, sketch_capacity=cap, config=cfg)
         ctl.rounds = rounds
-        ctl.sketch = WorkloadSketch.from_state(
-            {"meta": state["sketch.meta"], "rows": state["sketch.rows"]})
+        if "sketch.meta" in state:  # pre-multi-tenant layout
+            ctl.sketches[DEFAULT_TENANT] = WorkloadSketch.from_state(
+                {"meta": state["sketch.meta"], "rows": state["sketch.rows"]})
+        else:
+            raw = bytes(np.asarray(state["tenants"], np.uint8)).decode("utf-8")
+            for i, t in enumerate(raw.split("\n") if raw else []):
+                ctl.sketches[t] = WorkloadSketch.from_state(
+                    {"meta": state[f"sketch{i}.meta"],
+                     "rows": state[f"sketch{i}.rows"]})
         dwell = np.asarray(state["dwell"], np.int64).reshape(-1, k + 1)
         for row in dwell:
             seq = tuple(int(x) for x in row[:k] if x >= 0)

@@ -146,7 +146,8 @@ def skewed_labeled_graph(n_vertices: int = 160, n_labels: int = 6,
 
 
 def drifting_workload(g: LabeledGraph, phases, n_per_phase: int,
-                      hot_fraction: float = 0.85, seed: int = 0):
+                      hot_fraction: float = 0.85, seed: int = 0,
+                      tenants=None):
     """A phased query stream whose hot set *drifts* — the adaptive
     iaCPQx benchmark workload (and the regime adaptive indexing exists
     for: traffic concentrates on a few templates, then moves).
@@ -160,24 +161,46 @@ def drifting_workload(g: LabeledGraph, phases, n_per_phase: int,
     but cold sequences, not just rank the only thing it ever saw.
 
     Returns a list of per-phase query lists (deterministic in ``seed``).
-    """
+
+    **Multi-tenant mode** (``tenants`` set): ``tenants`` maps a tenant
+    name to ``(phases, weight)`` — its own drifting hot-template
+    schedule (every tenant must have the same phase count; ``phases``
+    is ignored, pass ``None``) and its share of the traffic.  Each
+    phase then yields ``n_per_phase`` ``(tenant, query)`` pairs, the
+    tenant of each slot drawn by weight, its query drawn from that
+    tenant's hot set for the phase — interleaved traffic whose hot
+    sets differ per tenant AND drift over time, which is exactly what
+    per-tenant sketches exist to keep apart."""
     from repro.core.query import TEMPLATE_ARITY, instantiate_template
 
     rng = np.random.default_rng(seed)
     present = np.unique(g.lbl)
     names = sorted(TEMPLATE_ARITY)
+
+    def draw(hot):
+        if rng.random() < hot_fraction:
+            name, labels = hot[int(rng.integers(0, len(hot)))]
+            return instantiate_template(name, list(labels))
+        name = names[int(rng.integers(0, len(names)))]
+        labels = rng.choice(present, TEMPLATE_ARITY[name]).tolist()
+        return instantiate_template(name, labels)
+
+    if tenants is None:
+        return [[draw(hot) for _ in range(n_per_phase)] for hot in phases]
+
+    tnames = sorted(tenants)
+    n_phases = {len(tenants[t][0]) for t in tnames}
+    if len(n_phases) != 1:
+        raise ValueError("every tenant needs the same number of phases")
+    weights = np.array([float(tenants[t][1]) for t in tnames])
+    weights = weights / weights.sum()
     out = []
-    for hot in phases:
-        qs = []
+    for pi in range(n_phases.pop()):
+        slot = []
         for _ in range(n_per_phase):
-            if rng.random() < hot_fraction:
-                name, labels = hot[int(rng.integers(0, len(hot)))]
-                qs.append(instantiate_template(name, list(labels)))
-            else:
-                name = names[int(rng.integers(0, len(names)))]
-                labels = rng.choice(present, TEMPLATE_ARITY[name]).tolist()
-                qs.append(instantiate_template(name, labels))
-        out.append(qs)
+            t = tnames[int(rng.choice(len(tnames), p=weights))]
+            slot.append((t, draw(tenants[t][0][pi])))
+        out.append(slot)
     return out
 
 

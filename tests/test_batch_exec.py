@@ -10,6 +10,7 @@ from conftest import random_graph
 from repro.core import index as cindex
 from repro.core import oracle
 from repro.core.engine import Engine, QueryCaps
+from repro.core.graph import LabeledGraph
 from repro.core.query import TEMPLATES, TEMPLATE_ARITY, instantiate_template
 
 
@@ -115,6 +116,97 @@ class TestBatchOverflowRetry:
         merged = [_rows(r) for r in eng.execute_batch(qs, min_bucket=16)]
         assert base == merged
         assert base == [oracle.cpq_eval(g, q) for q in qs]
+
+
+def _heavy_graph() -> LabeledGraph:
+    """Complete bipartite label-0 waves in both directions: (0.0) has
+    72 answer pairs, so tiny caps overflow through every doubling rung
+    and land on the default-caps jump (attempt >= 3)."""
+    A, B = range(0, 6), range(6, 12)
+    edges = [(a, b, 0) for a in A for b in B]
+    edges += [(b, a, 0) for a in A for b in B]
+    return LabeledGraph.from_edges(12, 2, edges)
+
+
+class TestTelemetryParity:
+    def test_one_lane_batch_matches_execute(self):
+        """Bug 3 regression, half one: a 1-lane ``execute_batch`` must
+        report the SAME ladder telemetry as ``execute`` — queries,
+        rungs, and default jumps."""
+        g = _heavy_graph()
+        idx = cindex.build(g, 2)
+        e1, e2 = Engine(idx), Engine(idx)
+        q = instantiate_template("C2", [0, 0])
+        r1 = e1.execute(q, caps=QueryCaps(2, 2, 2))
+        (r2,) = e2.execute_batch([q], caps=QueryCaps(2, 2, 2))
+        assert _rows(r1) == _rows(r2) == oracle.cpq_eval(g, q)
+        t1, t2 = e1.telemetry, e2.telemetry
+        assert t1.default_jumps > 0  # the ladder actually jumped
+        assert (t1.queries, t1.retry_rungs, t1.default_jumps) == \
+            (t2.queries, t2.retry_rungs, t2.default_jumps)
+
+    def test_default_jumps_count_per_lane(self):
+        """Bug 3 regression, half two: N lanes that each exhaust the
+        doubling rungs are N default-caps jumps, not one per dispatch —
+        the pre-fix per-dispatch counter under-reported by the batch
+        width, hiding estimator misses exactly when batching amortized
+        them."""
+        g = _heavy_graph()
+        idx = cindex.build(g, 2)
+        q = instantiate_template("C2", [0, 0])
+        single = Engine(idx)
+        single.execute(q, caps=QueryCaps(2, 2, 2))
+        per_lane = single.telemetry.default_jumps
+        assert per_lane > 0
+        batch = Engine(idx)
+        batch.execute_batch([q] * 4, caps=QueryCaps(2, 2, 2))
+        assert batch.telemetry.default_jumps == 4 * per_lane
+        assert batch.telemetry.retry_rungs == \
+            4 * single.telemetry.retry_rungs
+
+
+class TestUnionExecutable:
+    def test_union_matches_shaped_and_oracle(self, built):
+        """Straggler fusion is a perf knob, never a semantics knob: a
+        mixed-template batch forced through ONE union dispatch is
+        bit-identical to the per-shape path and the oracle."""
+        g, _ = built
+        idx = cindex.build(g, 2)
+        shaped, fused = Engine(idx), Engine(idx)
+        rng = np.random.default_rng(19)
+        qs = _template_queries(g, rng, ["C2", "T", "S", "C2i", "St", "C4"])
+        base = shaped.execute_batch(qs, min_bucket=1)
+        got = fused.execute_batch(qs, union=True, min_bucket=64)
+        for q, r, u in zip(qs, base, got):
+            assert _rows(u) == _rows(r) == oracle.cpq_eval(g, q), q
+        assert fused.telemetry.union_lanes == len(qs)
+        assert fused.telemetry.dispatches <= shaped.telemetry.dispatches
+
+    def test_union_drives_the_retry_ladder(self, built):
+        """Per-lane sticky overflow keeps working through the union VM:
+        tiny caps force the ladder and every answer ends exact."""
+        g, _ = built
+        eng = Engine(cindex.build(g, 2))
+        rng = np.random.default_rng(23)
+        qs = _template_queries(g, rng, ["C2", "C4", "T", "TT"])
+        res = eng.execute_batch(qs, caps=QueryCaps(2, 2, 2), union=True,
+                                min_bucket=64)
+        for q, r in zip(qs, res):
+            assert _rows(r) == oracle.cpq_eval(g, q), q
+        assert eng.telemetry.union_lanes == len(qs)
+        assert eng.telemetry.retry_rungs > 0
+
+    def test_full_buckets_are_not_fused(self, built):
+        """Only sub-``min_bucket`` stragglers fuse; a bucket already
+        wide enough keeps its specialized executable."""
+        g, _ = built
+        eng = Engine(cindex.build(g, 2))
+        rng = np.random.default_rng(29)
+        qs = _template_queries(g, rng, ["T"], n_per=5)  # one shape, 5 wide
+        res = eng.execute_batch(qs, union=True, min_bucket=4)
+        for q, r in zip(qs, res):
+            assert _rows(r) == oracle.cpq_eval(g, q), q
+        assert eng.telemetry.union_lanes == 0
 
 
 class TestAdaptiveCaps:

@@ -194,3 +194,64 @@ class TestCheckpointInterleavingProperty:
                 for q in probes:
                     got = {tuple(r) for r in replica.query(q).tolist()}
                     assert got == truth[q], (step, q)
+
+
+# a serving event: kind 0 = burst-submit reads, 1 = graph write through
+# the service, 2 = manual flush; (v, u, l) parameterize the write.
+serve_event_st = st.tuples(st.integers(0, 2), op_st)
+
+
+class TestServingSerializabilityProperty:
+    @given(edges=st.lists(edge_st, min_size=2, max_size=8),
+           events=st.lists(serve_event_st, min_size=2, max_size=8),
+           qseed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_queued_reads_see_the_submit_time_graph(self, edges, events,
+                                                    qseed):
+        """PR 7's serializability contract at the service level: with
+        auto-flush off, a read burst-submitted between writes must
+        answer on exactly the prefix of writes accepted BEFORE its
+        submission — queued-but-undrained writes included, later writes
+        never — under any interleaving of submits, writes and flushes."""
+        g = LabeledGraph.from_edges(N_VERTICES, N_LABELS, edges)
+        mi = MaintainableIndex.build(g, 2)
+        svc = QueryService(Engine(mi.flush()), maintainer=mi,
+                           max_batch=4, auto_flush=False)
+        rng = np.random.default_rng(qseed)
+        # host mirror of the ACCEPTED write prefix (the maintainer's own
+        # graph only advances when the service drains)
+        shadow = {tuple(map(int, e)) for e in g._base_edges()}
+        expected = []  # (request, oracle truth at submit time)
+
+        for kind, (opk, v, u, l) in events:
+            if kind == 0:
+                sg = LabeledGraph.from_edges(N_VERTICES, N_LABELS,
+                                             sorted(shadow))
+                for _ in range(2):
+                    q = oracle.random_cpq(rng, sg, 2)
+                    expected.append((svc.submit(q),
+                                     oracle.cpq_eval(sg, q)))
+            elif kind == 1:
+                base = sorted(shadow)
+                if opk != 0 and base:
+                    target = base[(v * N_VERTICES + u) % len(base)]
+                    shadow.discard(target)
+                    if opk == 1:
+                        svc.apply_updates([("delete_edge", *target)])
+                    else:
+                        relabeled = (target[0], target[1],
+                                     (target[2] + 1) % N_LABELS)
+                        shadow.add(relabeled)
+                        svc.apply_updates([("change_label", *target,
+                                            relabeled[2])])
+                else:
+                    shadow.add((v, u, l % N_LABELS))
+                    svc.apply_updates([("insert_edge", v, u,
+                                        l % N_LABELS)])
+            else:
+                svc.flush()
+        svc.flush()
+        for req, truth in expected:
+            assert req.done and not req.shed
+            got = {tuple(r) for r in req.result.tolist()}
+            assert got == truth, req.query

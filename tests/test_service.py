@@ -12,6 +12,7 @@ from repro.core.engine import Engine
 from repro.core.maintenance import MaintainableIndex
 from repro.core.query import TEMPLATES, TEMPLATE_ARITY, instantiate_template
 from repro.core.service import QueryService
+from repro.core.workload import AdaptationConfig, AdaptationController
 
 
 def _rows(arr) -> set:
@@ -184,3 +185,165 @@ class TestEpochInvalidation:
         m.insert_edge(1, 3, 0)
         svc.rebind(cindex.build(m.g, 2))
         assert req.done and _rows(req.result) == gt_old
+
+
+def _adaptive_svc(g, **kw):
+    """Interest-aware service with a controlled adapter for the PR 7
+    serializability/vote-accounting regressions."""
+    mi = MaintainableIndex.build(g, 2, interests=[])
+    adapter = AdaptationController(
+        2, config=AdaptationConfig(budget=2, min_count=2.0, dwell=1,
+                                   decay=0.5))
+    kw.setdefault("adapt_interval", 10_000)
+    kw.setdefault("max_batch", 8)
+    svc = QueryService(Engine(mi.flush()), maintainer=mi, adapter=adapter,
+                       **kw)
+    return svc, mi
+
+
+class TestServingBugRegressions:
+    def test_adapt_drains_queued_reads_before_queueing_interests(
+            self, ex_graph):
+        """Bug 1 (serializability crack): an adaptation round fired while
+        reads sit in the queue — reachable through a cache-hit submit,
+        which never flushes — must drain those reads BEFORE extending the
+        pending-update queue.  Pre-fix, the next flush applied the
+        interest batch first, so a read executed against state from a
+        write accepted AFTER it was submitted."""
+        svc, mi = _adaptive_svc(ex_graph)
+        qc = instantiate_template("C2", [0, 1])
+        q1 = instantiate_template("T", [0, 0, 1])
+        svc.query(qc)  # warm the result cache
+        queued = svc.submit(q1)  # parks: max_batch > 1, auto flush off
+        assert not queued.done
+        # arm the next _maybe_adapt with a proposal we control
+        svc._planned_since_adapt = svc.adapt_interval
+        svc.adapter.propose = lambda stats, cur: [
+            ("insert_interest", (0, 0))]
+        seen = []  # interest set live at each device dispatch
+        orig = svc.engine.dispatch_batch
+
+        def spy(*args, **kwargs):
+            seen.append(frozenset(mi.index.interests))
+            return orig(*args, **kwargs)
+
+        svc.engine.dispatch_batch = spy
+        hit = svc.submit(qc)  # cache hit -> _maybe_adapt -> adapt()
+        assert hit.from_cache
+        # the queued read drained inside adapt(), on the PRE-round index
+        assert queued.done
+        assert _rows(queued.result) == oracle.cpq_eval(mi.g, q1)
+        assert seen and all((0, 0) not in s for s in seen)
+        svc.flush()  # now the interest batch drains
+        assert (0, 0) in mi.index.interests
+
+    def test_failed_flush_does_not_double_vote(self, ex_graph):
+        """Bug 2 (vote accounting): a flush that dies in the engine
+        requeues its requests; the retry re-plans but must NOT credit
+        the workload sketch again — votes are idempotent per request.
+        Pre-fix, every requeue inflated the hot sequence's count, so
+        flaky traffic steered adaptation."""
+        svc, mi = _adaptive_svc(ex_graph)
+        q = instantiate_template("T", [0, 0, 1])  # votes (0, 0)
+        req = svc.submit(q)
+        svc.max_retries = 0
+        with pytest.raises(RuntimeError):
+            svc.flush()
+        assert not req.done  # requeued, not lost
+        assert svc.adapter.sketch.count((0, 0)) == 1  # voted exactly once
+        svc.max_retries = 8
+        svc.flush()
+        assert req.done
+        assert _rows(req.result) == oracle.cpq_eval(mi.g, q)
+        assert svc.adapter.sketch.count((0, 0)) == 1  # still exactly once
+
+
+class TestMultiTenantServing:
+    def test_shed_is_explicit_and_accepted_never_lost(self, ex_graph):
+        """Admission control's two-sided contract: overflow is rejected
+        AT SUBMIT (shed=True, done=True, result=None) and everything
+        accepted completes with oracle-exact rows."""
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=4,
+                           max_queue=4, auto_flush=False)
+        qs = _workload(ex_graph, np.random.default_rng(21),
+                       ["C2", "T", "S", "C4", "C2i", "St", "TT"])
+        reqs = [svc.submit(q, tenant=f"t{i % 2}")
+                for i, q in enumerate(qs)]
+        shed = [r for r in reqs if r.shed]
+        accepted = [r for r in reqs if not r.shed]
+        assert len(shed) == 3 and svc.stats.shed == 3
+        for r in shed:
+            assert r.done and r.result is None
+        svc.flush()
+        for r in accepted:
+            assert r.done
+            assert _rows(r.result) == oracle.cpq_eval(ex_graph, r.query)
+
+    def test_one_shot_query_raises_on_shed(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_queue=1, auto_flush=False)
+        svc.submit(instantiate_template("C2", [0, 1]))
+        with pytest.raises(RuntimeError, match="shed"):
+            svc.query(instantiate_template("C2", [1, 0]))
+
+    def test_per_tenant_queue_bound(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=8,
+                           max_queue_per_tenant=2, auto_flush=False)
+        qs = _workload(ex_graph, np.random.default_rng(25),
+                       ["C2", "T", "S", "C4"])
+        a = [svc.submit(q, tenant="a") for q in qs[:3]]
+        b = svc.submit(qs[3], tenant="b")
+        assert [r.shed for r in a] == [False, False, True]
+        assert not b.shed  # a's flood never blocks b
+        assert svc.stats.tenant("a").shed == 1
+        svc.flush()
+        for r in (a[0], a[1], b):
+            assert _rows(r.result) == oracle.cpq_eval(ex_graph, r.query)
+
+    def test_fair_drain_round_robins_across_tenants(self, ex_graph):
+        """A tenant flooding the queue only delays itself: with rounds
+        of 4, tenant b's two requests ride the FIRST round even though
+        tenant a submitted four requests ahead of them."""
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=4,
+                           auto_flush=False)
+        qa = _workload(ex_graph, np.random.default_rng(31),
+                       ["C2", "T", "S", "C4"])
+        qb = _workload(ex_graph, np.random.default_rng(33), ["C2i", "St"])
+        for q in qa:
+            svc.submit(q, tenant="a")
+        for q in qb:
+            svc.submit(q, tenant="b")
+        rounds = []
+        orig = svc.engine.dispatch_batch
+
+        def spy(queries, *args, **kwargs):
+            rounds.append(list(queries))
+            return orig(queries, *args, **kwargs)
+
+        svc.engine.dispatch_batch = spy
+        done = svc.flush()
+        assert len(done) == 6 and svc.stats.drain_rounds == 2
+        assert all(q in rounds[0] for q in qb)  # b served in round one
+        assert set(rounds[1]) <= set(qa)  # only a's tail waits
+
+    def test_per_tenant_stats(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)), max_batch=8)
+        q = instantiate_template("C2", [0, 1])
+        svc.query(q, tenant="a")
+        svc.query(q, tenant="b")  # served from a's cached answer
+        a, b = svc.stats.tenant("a"), svc.stats.tenant("b")
+        assert (a.submitted, a.served, a.cache_hits) == (1, 1, 0)
+        assert (b.submitted, b.served, b.cache_hits) == (1, 1, 1)
+
+    def test_union_service_differential(self, ex_graph):
+        """A union-dispatch service fusing straggler shape buckets still
+        answers every template oracle-exactly."""
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_batch=32, union=True)
+        rng = np.random.default_rng(37)
+        qs = _workload(ex_graph, rng, sorted(TEMPLATES))
+        reqs = [svc.submit(q) for q in qs]
+        svc.flush()
+        for q, r in zip(qs, reqs):
+            assert _rows(r.result) == oracle.cpq_eval(ex_graph, q), q
+        assert svc.engine.telemetry.union_lanes > 0

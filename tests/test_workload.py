@@ -409,6 +409,140 @@ class TestAdaptiveEndToEnd:
         run()
 
 
+class TestMultiTenantAdaptation:
+    def test_sketches_are_isolated_per_tenant(self):
+        c = AdaptationController(2)
+        q = instantiate_template("T", [0, 0, 1])
+        c.observe(q, tenant="a")
+        assert c.sketch_for("a").count((0, 0)) == 1
+        assert c.sketch_for("b").count((0, 0)) == 0
+        assert c.sketch.count((0, 0)) == 0  # default tenant untouched
+
+    def test_round_robin_budget_arbitration(self, skewed_stats):
+        """`budget` is PER TENANT, admitted round-robin under the global
+        pair budget: a tenant flooding its sketch cannot consume another
+        tenant's adaptation capacity."""
+        _, stats = skewed_stats
+        c = AdaptationController(2, config=AdaptationConfig(
+            budget=1, min_count=2.0, min_benefit=1.0, swap_margin=2.0,
+            dwell=1, decay=1.0))
+        hot_a = instantiate_template("T", [0, 0, 1])  # votes (0, 0)
+        hot_b = instantiate_template("S", [2, 3, 1, 1])  # (2,3), (1,1)
+        for _ in range(50):  # a floods
+            c.observe(hot_a, tenant="a")
+        for _ in range(6):  # b is merely warm
+            c.observe(hot_b, tenant="b")
+        ops = c.propose(stats, frozenset())
+        inserts = {op[1] for op in ops if op[0] == "insert_interest"}
+        assert (0, 0) in inserts  # tenant a's slot
+        assert inserts & {(2, 3), (1, 1)}  # b still got its own slot
+        assert len(inserts) == 2  # one per tenant under budget=1
+
+    def test_single_tenant_path_is_the_legacy_controller(self, skewed_stats):
+        """With one tenant the arbitration degenerates to the PR 5
+        controller: the `sketch` property aliases the default tenant."""
+        _, stats = skewed_stats
+        c = AdaptationController(2, config=AdaptationConfig(
+            budget=1, min_count=2.0, min_benefit=1.0, swap_margin=2.0,
+            dwell=1, decay=1.0))
+        for _ in range(5):
+            c.observe(instantiate_template("T", [0, 0, 1]))
+        assert c.sketch.count((0, 0)) == 5
+        assert c.propose(stats, frozenset()) == [
+            ("insert_interest", (0, 0))]
+
+    def test_multi_tenant_codec_round_trip(self):
+        c = AdaptationController(2)
+        c.observe(instantiate_template("T", [0, 0, 1]), tenant="a")
+        c.observe(instantiate_template("S", [2, 3, 1, 1]), weight=2.0,
+                  tenant="beta-2")
+        c2 = AdaptationController.from_state(c.export_state())
+        assert sorted(c2.sketches) == sorted(c.sketches)
+        assert c2.sketch_for("a").count((0, 0)) == 1
+        assert c2.sketch_for("beta-2").count((2, 3)) == 2.0
+
+
+def _serializable_prefix_script(seed, script):
+    """Drive one interleaving of burst-submitted reads ('s'), graph
+    writes ('u'), adaptation rounds ('a') and manual flushes ('f')
+    through an auto_flush=False adaptive service, asserting the
+    serializable-prefix contract: every answer equals the oracle on the
+    graph AS OF THE REQUEST'S SUBMISSION — a write accepted after a
+    submit is never visible to it.  Bug 1's schedule class (adapt()
+    firing with reads still queued) is reachable via 'a'."""
+    from repro.core.graph import LabeledGraph
+
+    g = random_graph(seed % 83, n_max=9, m_max=18)
+    mi = MaintainableIndex.build(g, 2, interests=[])
+    adapter = AdaptationController(2, config=AdaptationConfig(
+        budget=2, min_count=2.0, dwell=1, decay=0.5))
+    svc = QueryService(Engine(mi.flush()), maintainer=mi,
+                       adapter=adapter, adapt_interval=4,
+                       max_batch=4, auto_flush=False)
+    rng = np.random.default_rng(seed)
+    # the prefix of writes ACCEPTED so far, mirrored host-side (the
+    # service's own mirror only advances at drain time)
+    shadow = {tuple(map(int, e)) for e in g._base_edges()}
+    expected = []  # (request, oracle truth at submit time)
+
+    def shadow_graph():
+        return LabeledGraph.from_edges(g.n_vertices, g.n_labels,
+                                       sorted(shadow))
+
+    for action in script:
+        if action == "s":
+            sg = shadow_graph()
+            for q in _query_pool(sg, rng, n=2):
+                expected.append((svc.submit(q), oracle.cpq_eval(sg, q)))
+        elif action == "u":
+            if len(shadow) > 1 and rng.random() < 0.5:
+                e = sorted(shadow)[int(rng.integers(0, len(shadow)))]
+                shadow.discard(e)
+                svc.apply_updates([("delete_edge", *e)])
+            else:
+                e = (int(rng.integers(0, g.n_vertices)),
+                     int(rng.integers(0, g.n_vertices)),
+                     int(rng.integers(0, g.n_labels)))
+                shadow.add(e)
+                svc.apply_updates([("insert_edge", *e)])
+        elif action == "a":
+            svc.adapt()
+        else:
+            svc.flush()
+    svc.flush()
+    for req, truth in expected:
+        assert req.done and not req.shed
+        assert _rows(req.result) == truth, req.query
+
+
+class TestSerializablePrefixProperty:
+    def test_fixed_interleavings(self):
+        """Deterministic schedules covering the Bug 1 class and its
+        neighbors: reads queued across adaptation rounds, writes
+        between bursts, back-to-back writes, adapt-then-write."""
+        for seed, script in [
+            (7, ["s", "a", "s", "u", "f"]),  # Bug 1: adapt on a queue
+            (19, ["s", "u", "s", "a", "f"]),
+            (23, ["s", "s", "u", "u", "a", "s", "f"]),
+            (41, ["u", "s", "a", "u", "s", "f", "a"]),
+        ]:
+            _serializable_prefix_script(seed, script)
+
+    def test_property_queued_reads_see_only_prior_writes(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        given, settings, st = (hypothesis.given, hypothesis.settings,
+                               hypothesis.strategies)
+
+        @settings(max_examples=8, deadline=None)
+        @given(seed=st.integers(0, 10_000),
+               script=st.lists(st.sampled_from(["s", "u", "a", "f"]),
+                               min_size=4, max_size=12))
+        def run(seed, script):
+            _serializable_prefix_script(seed, script)
+
+        run()
+
+
 class TestVoteAccounting:
     def test_folded_duplicates_and_cache_hits_still_vote(self):
         """N submissions of one hot template must credit ~N votes, not
