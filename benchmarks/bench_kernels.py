@@ -2,20 +2,44 @@
 TPU) vs the jnp reference path, across the engine's working sizes.
 On CPU the relative numbers reflect interpret-mode overhead — the
 correctness contract is what CI checks; on TPU this bench reports the
-fusion win."""
+fusion win.
+
+Also sweeps the autotuner's block-shape candidates per capacity rung
+(``kernels.autotune``) and emits one row per (kernel, rung, block), so
+the block-shape landscape lands in the ``BENCH_*.json`` trajectory like
+every other bench (``--json``, or via ``benchmarks.run``)."""
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.kernels.autotune import autotune
 
-from .common import emit, timeit
+from .common import emit, timeit, write_json
+
+
+def block_sweep_section(rungs, repeats: int) -> None:
+    """One row per candidate block shape at each capacity rung — the
+    same sweep the calibration artifact caches winners from."""
+    block_q, block_t, raw = autotune(rungs, repeats=repeats)
+    for (kind, rung, blk), ns in sorted(raw.items()):
+        win = (block_q if kind == "block_q" else block_t)[rung]
+        emit(f"kernels/sweep/{kind}/r{rung}/b{blk}", ns / 1e3,
+             f"winner={win};chosen={blk == win}")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller block-sweep rungs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON")
+    args, _ = ap.parse_known_args()
     rng = np.random.default_rng(0)
 
     # sorted_intersect: class-id membership at paper-ish sizes
@@ -57,7 +81,14 @@ def main() -> None:
          timeit(lambda: f_k(scores, seg).block_until_ready()), "")
     emit(f"kernels/segment_softmax/{e}x{d}/jnp_ref",
          timeit(lambda: f_r(scores, seg).block_until_ready()), "")
+
+    block_sweep_section(rungs=(1 << 10,) if args.smoke
+                        else (1 << 10, 1 << 12, 1 << 14),
+                        repeats=2 if args.smoke else 3)
     jax.clear_caches()
+
+    if args.json:
+        write_json(args.json, bench="bench_kernels", smoke=args.smoke)
 
 
 if __name__ == "__main__":

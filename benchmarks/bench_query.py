@@ -182,12 +182,91 @@ def optimizer_section(shard_counts, iters: int, gate_speedup: bool = True) -> bo
     return failed
 
 
+def calibrated_section(table_path: str, iters: int) -> bool:
+    """The PR 8 cost-model gate: plans priced through a calibrated
+    :class:`DeviceCostTable` vs the row-count planner vs syntactic.
+
+    Gates (any failure returns True):
+
+    * every calibrated plan is answer-identical to the syntactic planner
+      and the numpy oracle (a mispriced table may only change plan
+      choice/capacities, never answers);
+    * the C4 chain — whose 3-leaf row-optimal split loses 0.3–0.6x to
+      per-stage dispatch overhead at CI scale — is >= 1x vs the 2-leaf
+      syntactic plan.  When the calibrated planner picks the *same* plan
+      as syntactic (the expected outcome: the stage constants price the
+      third dispatch out), the speedup is definitionally 1x (same jit
+      executable) and the gate passes without a wall-clock coin flip.
+
+    Every row carries ``predicted_ns`` in its derived tag —
+    ``DeviceCostTable.refine_from_trajectory`` parses exactly this, so
+    the emitted JSON is next run's training data.
+    """
+    import jax
+
+    from repro.core import costmodel
+    from repro.core import index as cindex, oracle
+    from repro.core.engine import Engine
+    from repro.core.optimizer import estimate_plan
+    from repro.core.query import freeze_plan, instantiate_template
+
+    from benchmarks.common import DATASETS, emit, timeit
+
+    table = costmodel.DeviceCostTable.load(table_path)
+    costmodel.activate(table)  # tuned blocks + VMEM ceiling for kernels
+    g = DATASETS["skewed-hub"]()
+    idx = cindex.build(g, 2)
+    probes = [(name, instantiate_template(name, labels))
+              for name, labels in OPT_GATED + OPT_RUNG_GATED + OPT_EXTRA]
+    truth = {name: oracle.cpq_eval(g, q) for name, q in probes}
+
+    e_syn = Engine(idx, optimize=False)
+    e_cal = Engine(idx, cost_table=table)
+    failed = False
+    for name, q in probes:
+        syn_rows = e_syn.execute(q)
+        cal_rows = e_cal.execute(q)
+        ok = (syn_rows.shape == cal_rows.shape
+              and bool(np.all(syn_rows == cal_rows))
+              and {tuple(r) for r in cal_rows.tolist()} == truth[name])
+        failed |= not ok
+        plan_cal = e_cal.plan(q)
+        plans_equal = freeze_plan(plan_cal) == freeze_plan(e_syn.plan(q))
+        predicted = estimate_plan(plan_cal, e_cal.stats,
+                                  cost_table=table).cost_ns
+        us_syn = timeit(lambda: e_syn.execute(q), iters=iters)
+        us_cal = timeit(lambda: e_cal.execute(q), iters=iters)
+        speedup = 1.0 if plans_equal else us_syn / max(us_cal, 1e-9)
+        if name == "C4":
+            c4_ok = ok and (plans_equal or speedup >= 1.0)
+            failed |= not c4_ok
+            tag = f";c4_gate={'PASS' if c4_ok else 'FAIL'}"
+        else:
+            tag = ""
+        emit(f"calibrated/skewed-hub/{name}", us_cal,
+             f"syntactic_us={us_syn:.1f};speedup={speedup:.2f}x;"
+             f"plans_equal={plans_equal};predicted_ns={predicted:.0f};"
+             f"scale={table.scale:.3f};"
+             f"answers={'PASS' if ok else 'FAIL'}" + tag)
+    emit("calibrated/skewed-hub/acceptance", 0.0,
+         f"answers==syntactic==oracle;"
+         f"{'FAIL' if failed else 'PASS'}")
+    costmodel.activate(None)
+    del e_syn, e_cal
+    jax.clear_caches()
+    return failed
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: optimizer gate only, n_shards in {1, 8}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows as JSON")
+    ap.add_argument("--cost-table", default=None, metavar="PATH",
+                    help="run the calibrated-planner gate against this "
+                         "DeviceCostTable JSON (benchmarks.calibrate "
+                         "writes one)")
     args, _ = ap.parse_known_args()
 
     if args.smoke and "XLA_FLAGS" not in os.environ:
@@ -199,10 +278,14 @@ def main() -> None:
     failed = optimizer_section([1, 8] if args.smoke else [1],
                                iters=2 if args.smoke else 3,
                                gate_speedup=args.smoke)
+    if args.cost_table:
+        failed |= calibrated_section(args.cost_table,
+                                     iters=2 if args.smoke else 3)
     if args.json:
         from benchmarks.common import write_json
 
-        write_json(args.json, bench="bench_query", smoke=args.smoke)
+        write_json(args.json, bench="bench_query", smoke=args.smoke,
+                   cost_table=bool(args.cost_table))
     if failed:
         sys.exit(1)
 

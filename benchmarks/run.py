@@ -24,7 +24,8 @@ BENCHES = {
     "table5": "benchmarks.bench_update",  # maintenance (+ tables 6/7)
     "fig14": "benchmarks.bench_k",  # behavior in k (+ fig 15)
     "fig11": "benchmarks.bench_scalability",  # graph-size scaling
-    "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp reference
+    "kernels": "benchmarks.bench_kernels",  # Pallas vs jnp ref + block sweeps
+    "calibrate": "benchmarks.calibrate",  # device cost table artifact (PR 8)
     "throughput": "benchmarks.bench_throughput",  # serving qps (PR 1)
     "adaptive": "benchmarks.bench_adaptive",  # drifting-workload mining (PR 5)
     "recovery": "benchmarks.bench_recovery",  # kill-and-recover TTFCA (PR 6)

@@ -134,13 +134,23 @@ class Engine:
     optimizer over the index statistics; False pins the syntactic
     ``plan_query`` (the stats-free fallback — what the oracle and the
     pre-PR-4 engine used), which benchmarks use as the baseline.
+
+    ``cost_table`` (a :class:`~repro.core.costmodel.DeviceCostTable`)
+    upgrades the row-count objective to calibrated device nanoseconds:
+    the planner prices per-stage dispatch constants and
+    :meth:`estimate_caps` picks the starting capacity rung with the
+    minimal expected cost *including retry risk* instead of the pure row
+    bound.  None (default) keeps today's behavior bit-for-bit.  The
+    table survives :meth:`rebind` — like the telemetry, it describes the
+    device, not the index.
     """
 
     def __init__(self, index: CPQxIndex, mesh=None, axis: str = "engine",
-                 optimize: bool = True):
+                 optimize: bool = True, cost_table=None):
         self.mesh = mesh
         self.axis = axis
         self.optimize = optimize
+        self.cost_table = cost_table
         self.telemetry = LadderTelemetry()
         self.rebind(index)
 
@@ -188,7 +198,8 @@ class Engine:
         engine was constructed with ``optimize=False``."""
         if self.optimize:
             return optimize_query(q, self.index.k, self.stats,
-                                  available=self._available)
+                                  available=self._available,
+                                  cost_table=self.cost_table)
         return plan_query(q, self.index.k, available=self._available)
 
     def estimate_caps(self, ranges: np.ndarray, shape,
@@ -217,19 +228,33 @@ class Engine:
                 max_pairs = max(max_pairs, int(self._class_sizes[cls].sum()))
         headroom = 2
         max_join = 0
+        risky = False
         if plan is not None:
-            est = estimate_plan(plan, self.stats)
+            est = estimate_plan(plan, self.stats, cost_table=self.cost_table)
             max_pairs = int(max(est.max_pairs, est.pairs))
             # conjunction bounds are exact (min operand) but join outputs
             # are *estimates* — give plans with pair-space joins double
             # the headroom so residual misestimates rarely ladder
-            headroom = 4 if est.max_join > 0 else 2
+            risky = est.max_join > 0
+            headroom = 4 if risky else 2
             max_join = int(min(est.max_join, 4 * self._default_caps.join_cap))
         floor = self.index.n_vertices if _has_identity(shape) else 0
         # never *start* above the worst-case default (the retry ladder can
         # still climb past it if a join genuinely needs more)
         ceiling = max(self._default_caps.pair_cap, _pow2(floor))
         pair_cap = min(_pow2(max(64, headroom * max_pairs, floor)), ceiling)
+        if self.cost_table is not None and plan is not None:
+            # calibrated rung selection: among the tight rung and the
+            # headroom rungs above it, start at the one whose *expected*
+            # cost — this dispatch plus the overflow-risk-weighted retry
+            # at the next rung — is minimal.  A cheap dispatch (small
+            # fixed constants) makes optimistic starts worth the retry
+            # risk; an expensive one buys headroom up front.
+            base = min(_pow2(max(64, max_pairs, floor)), ceiling)
+            cands = sorted({min(c, ceiling) for c in
+                            (base, 2 * base, 4 * base, pair_cap)})
+            pair_cap = min(cands, key=lambda c: self.cost_table.
+                           expected_dispatch_ns(c, max_pairs, risky))
         join_cap = max(2 * pair_cap, _pow2(max_join))
         return QueryCaps(class_cap=_pow2(max(16, max_classes)),
                          pair_cap=pair_cap, join_cap=join_cap)

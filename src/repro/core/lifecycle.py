@@ -14,6 +14,9 @@ rename commit + LATEST pointer + fsync durability):
                         counters, dwell protections, config, round clock
     stats.endpoints     the priced entries of the IndexStats endpoint
                         cache (restored engines plan warm)
+    costtable.blob      the engine's :class:`DeviceCostTable` (one uint8
+                        JSON leaf) — restored engines price plans with
+                        their calibrated device constants immediately
     service.meta        the graph epoch
     sharded.*           per-shard leaves of a :class:`ShardedBackend`
                         (saved separately; restorable at a different
@@ -44,6 +47,7 @@ import numpy as np
 
 from ..checkpoint import latest_step, load_checkpoint_items, save_checkpoint
 from .capacity import FlushCaps, decode_caps, encode_caps
+from .costmodel import DeviceCostTable
 from .engine import Engine
 from .index import CPQxIndex, DeviceIndexArrays, _pull_seq_ranges
 from .maintenance import MaintainableIndex
@@ -152,6 +156,8 @@ def service_leaves(svc: QueryService) -> tuple[dict, dict]:
     endpoints = svc.engine.stats.export_endpoints()
     if endpoints is not None:
         leaves["stats.endpoints"] = endpoints
+    if getattr(svc.engine, "cost_table", None) is not None:
+        leaves["costtable.blob"] = svc.engine.cost_table.export_state()
     leaves["service.meta"] = np.array([svc.graph_epoch], np.int64)
     extra = {"format": FORMAT, "kind": "service",
              "label_names": label_names}
@@ -168,6 +174,7 @@ class RestoredState:
     adapter: AdaptationController | None
     epoch: int  # the donor's graph epoch AT the snapshot
     step: int
+    cost_table: DeviceCostTable | None = None  # absent in old checkpoints
 
 
 def load_state(ckpt_dir: str, step: Optional[int] = None) -> RestoredState:
@@ -190,8 +197,14 @@ def load_state(ckpt_dir: str, step: Optional[int] = None) -> RestoredState:
     if adp:
         adapter = AdaptationController.from_state(adp)
     epoch = int(np.asarray(items.get("service.meta", [0]), np.int64)[0])
+    # legacy checkpoints predate the cost table: the leaf is simply
+    # absent and the restored engine prices by rows, exactly as the
+    # donor did
+    cost_table = (DeviceCostTable.from_state(items["costtable.blob"])
+                  if "costtable.blob" in items else None)
     return RestoredState(index=index, stats=stats, maintainer=maintainer,
-                         adapter=adapter, epoch=epoch, step=step)
+                         adapter=adapter, epoch=epoch, step=step,
+                         cost_table=cost_table)
 
 
 def restore_service(ckpt_dir: str, step: Optional[int] = None, mesh=None,
@@ -202,7 +215,7 @@ def restore_service(ckpt_dir: str, step: Optional[int] = None, mesh=None,
     donor's, so any answer a stale client cached against the donor can
     never be confused with this replica's."""
     state = load_state(ckpt_dir, step)
-    engine = Engine(state.index, mesh=mesh)
+    engine = Engine(state.index, mesh=mesh, cost_table=state.cost_table)
     warm = state.stats.export_endpoints()
     if warm is not None:
         engine.stats.seed_endpoints(warm)

@@ -88,7 +88,14 @@ class PlanEstimate:
                    the uniform |V| assumption — which recovers the
                    classic |A|·|B| / |V| join estimate verbatim);
     ``max_out`` / ``max_in`` — out/in fanout upper bound of the result
-                   (inf when unknown).
+                   (inf when unknown);
+    ``cost_ns``  — estimated device time: the row estimates priced
+                   through a :class:`~repro.core.costmodel.
+                   DeviceCostTable`'s per-operator affine stage constants
+                   (fixed dispatch cost + per-row cost per plan stage).
+                   Exactly 0.0 when no table was supplied — the pure
+                   row-count ``cost`` is then the only objective, which
+                   keeps every pre-table golden plan byte-identical.
     """
 
     classes: float | None
@@ -100,6 +107,15 @@ class PlanEstimate:
     d_dst: float = _INF
     max_out: float = _INF
     max_in: float = _INF
+    cost_ns: float = 0.0
+
+
+def _ns(table, op: str, rows: float) -> float:
+    """Price one plan stage against the cost table; 0.0 with no table
+    (the row-count objective then decides alone, exactly as pre-table)."""
+    if table is None:
+        return 0.0
+    return table.stage_ns(op, rows)
 
 
 def join_card(a: float, b: float, n_vertices: int) -> float:
@@ -143,17 +159,19 @@ def join_est(el: "PlanEstimate", er: "PlanEstimate",
         max_out=el.max_out * er.max_out, max_in=el.max_in * er.max_in)
 
 
-def _leaf_est(seq: tuple, stats: IndexStats) -> PlanEstimate:
+def _leaf_est(seq: tuple, stats: IndexStats, table=None) -> PlanEstimate:
     """Profile of one indexed segment: exact cardinalities, and exact
     endpoint statistics when the view carries the pair columns."""
     cls = float(stats.seq_classes(seq))
     p = float(stats.seq_pairs(seq))
+    ns = _ns(table, "lookup", cls)
     ep = stats.seq_endpoints(seq)
     if ep is None:
-        return PlanEstimate(cls, p, cls, 0.0, 0.0)
+        return PlanEstimate(cls, p, cls, 0.0, 0.0, cost_ns=ns)
     return PlanEstimate(cls, p, cls, 0.0, 0.0,
                         d_src=float(ep.d_src), d_dst=float(ep.d_dst),
-                        max_out=float(ep.max_out), max_in=float(ep.max_in))
+                        max_out=float(ep.max_out), max_in=float(ep.max_in),
+                        cost_ns=ns)
 
 
 def _conj_endpoints(el: PlanEstimate, er: PlanEstimate, pairs: float):
@@ -164,32 +182,37 @@ def _conj_endpoints(el: PlanEstimate, er: PlanEstimate, pairs: float):
                 max_in=min(el.max_in, er.max_in))
 
 
-def _est(node, stats: IndexStats) -> PlanEstimate:
+def _est(node, stats: IndexStats, table=None) -> PlanEstimate:
     kind = node[0]
     if kind == "lookup":
         segs = node[1]
-        cur = _leaf_est(tuple(segs[0]), stats)
+        cur = _leaf_est(tuple(segs[0]), stats, table)
         if len(segs) == 1:
             return cur
         # multi-segment chain: every segment materializes, then folds
         # left-to-right through expansion joins (the walker's semantics)
         cost, maxp, maxj = cur.pairs, cur.pairs, 0.0
+        ns = cur.cost_ns + _ns(table, "materialize", cur.pairs)
         for seg in segs[1:]:
-            nxt = _leaf_est(tuple(seg), stats)
+            nxt = _leaf_est(tuple(seg), stats, table)
             out = join_est(cur, nxt, stats.n_vertices)
             cost += nxt.pairs + out.pairs
+            ns += (nxt.cost_ns + _ns(table, "materialize", nxt.pairs)
+                   + _ns(table, "join", out.pairs))
             maxp = max(maxp, nxt.pairs, out.pairs)
             maxj = max(maxj, out.max_join)  # pre-dedup witness bound
             cur = out
         return PlanEstimate(None, cur.pairs, cost, maxp, maxj,
                             d_src=cur.d_src, d_dst=cur.d_dst,
-                            max_out=cur.max_out, max_in=cur.max_in)
+                            max_out=cur.max_out, max_in=cur.max_in,
+                            cost_ns=ns)
     if kind == "identity":
         v = float(stats.n_vertices)
         return PlanEstimate(None, v, v, v, 0.0,
-                            d_src=v, d_dst=v, max_out=1.0, max_in=1.0)
+                            d_src=v, d_dst=v, max_out=1.0, max_in=1.0,
+                            cost_ns=_ns(table, "identity", v))
     if kind == "conj_id":
-        e = _est(node[1], stats)
+        e = _est(node[1], stats, table)
         if e.classes is not None:
             inner = node[1]
             if inner[0] == "lookup" and len(inner[1]) == 1:
@@ -199,14 +222,19 @@ def _est(node, stats: IndexStats) -> PlanEstimate:
             return PlanEstimate(e.classes, pairs, e.cost + e.classes,
                                 e.max_pairs, e.max_join,
                                 d_src=pairs, d_dst=pairs,
-                                max_out=1.0, max_in=1.0)
+                                max_out=1.0, max_in=1.0,
+                                cost_ns=e.cost_ns
+                                + _ns(table, "conjoin", e.classes))
         pairs = min(e.pairs, float(stats.n_vertices))
         return PlanEstimate(None, pairs, e.cost + e.pairs,
                             max(e.max_pairs, e.pairs), e.max_join,
                             d_src=pairs, d_dst=pairs,
-                            max_out=1.0, max_in=1.0)
+                            max_out=1.0, max_in=1.0,
+                            cost_ns=e.cost_ns
+                            + _ns(table, "conjoin", e.pairs))
     if kind == "conj":
-        el, er = _est(node[1], stats), _est(node[2], stats)
+        el = _est(node[1], stats, table)
+        er = _est(node[2], stats, table)
         maxj = max(el.max_join, er.max_join)
         if el.classes is not None and er.classes is not None:
             # Prop. 4.1: class-id intersection; |result ∩| pairs is
@@ -216,15 +244,23 @@ def _est(node, stats: IndexStats) -> PlanEstimate:
             return PlanEstimate(cls, pairs,
                                 el.cost + er.cost + cls,
                                 max(el.max_pairs, er.max_pairs), maxj,
-                                **_conj_endpoints(el, er, pairs))
+                                **_conj_endpoints(el, er, pairs),
+                                cost_ns=el.cost_ns + er.cost_ns
+                                + _ns(table, "conjoin",
+                                      el.classes + er.classes))
         lp, rp = el.pairs, er.pairs  # both sides materialize
         pairs = min(lp, rp)
         return PlanEstimate(None, pairs,
                             el.cost + er.cost + lp + rp,
                             max(el.max_pairs, er.max_pairs, lp, rp), maxj,
-                            **_conj_endpoints(el, er, pairs))
+                            **_conj_endpoints(el, er, pairs),
+                            cost_ns=el.cost_ns + er.cost_ns
+                            + _ns(table, "materialize", lp)
+                            + _ns(table, "materialize", rp)
+                            + _ns(table, "conjoin", lp + rp))
     if kind == "join":
-        el, er = _est(node[1], stats), _est(node[2], stats)
+        el = _est(node[1], stats, table)
+        er = _est(node[2], stats, table)
         lp, rp = el.pairs, er.pairs
         out = join_est(el, er, stats.n_vertices)
         return PlanEstimate(None, out.pairs,
@@ -233,21 +269,29 @@ def _est(node, stats: IndexStats) -> PlanEstimate:
                                 out.pairs),
                             max(el.max_join, er.max_join, out.max_join),
                             d_src=out.d_src, d_dst=out.d_dst,
-                            max_out=out.max_out, max_in=out.max_in)
+                            max_out=out.max_out, max_in=out.max_in,
+                            cost_ns=el.cost_ns + er.cost_ns
+                            + _ns(table, "materialize", lp)
+                            + _ns(table, "materialize", rp)
+                            + _ns(table, "join", out.pairs))
     raise ValueError(kind)
 
 
-def estimate_plan(plan, stats: IndexStats) -> PlanEstimate:
+def estimate_plan(plan, stats: IndexStats, cost_table=None) -> PlanEstimate:
     """Estimate a whole plan *including* the final materialization (a
     class-space result is expanded to pairs at the very end — the
-    epilogue of the plan walker)."""
-    e = _est(plan, stats)
+    epilogue of the plan walker).  With a ``cost_table`` the profile also
+    carries ``cost_ns`` — the same row estimates priced through the
+    table's fitted per-operator stage constants."""
+    e = _est(plan, stats, cost_table)
     if e.classes is None:
         return e
     return PlanEstimate(e.classes, e.pairs, e.cost + e.pairs,
                         max(e.max_pairs, e.pairs), e.max_join,
                         d_src=e.d_src, d_dst=e.d_dst,
-                        max_out=e.max_out, max_in=e.max_in)
+                        max_out=e.max_out, max_in=e.max_in,
+                        cost_ns=e.cost_ns
+                        + _ns(cost_table, "materialize", e.pairs))
 
 
 # ---------------------------------------------------------------------- #
@@ -281,14 +325,21 @@ def enumerate_splits(seq: tuple, k: int, available,
     return out if rec(0, []) else None
 
 
-def _best_split(labels: tuple, k: int, stats: IndexStats, available) -> list:
+def _best_split(labels: tuple, k: int, stats: IndexStats, available,
+                table=None) -> list:
     """Cheapest valid segmentation of one label run.
 
     A run that fits one indexed segment is provably optimal — its
     materialization is exactly the answer, and every split must
     materialize that same answer *plus* its own leaves — so it
     short-circuits (this is also the paper's Sec. VI-D observation that
-    a diameter-k chain on a k-index is a single lookup)."""
+    a diameter-k chain on a k-index is a single lookup).
+
+    With a cost table the objective is ``cost_ns`` — whose per-stage
+    fixed dispatch constants penalize extra segments, so a split that
+    wins on rows but loses on launch overhead (ROADMAP's C4 case at CI
+    scale) is no longer chosen.  The tie-break (fewer segments, then
+    lexicographic) is identical either way."""
     labels = tuple(labels)
     if len(labels) <= k and (available is None or labels in available
                              or len(labels) == 1):
@@ -299,29 +350,44 @@ def _best_split(labels: tuple, k: int, stats: IndexStats, available) -> list:
     best, best_key = None, None
     for segs in cands:
         items = [("lookup", [s]) for s in segs]
-        _, cost = _chain_dp(items, stats)
+        _, cost = _chain_dp(items, stats, table)
         key = (cost, len(segs), tuple(segs))
         if best_key is None or key < best_key:
             best, best_key = segs, key
     return best
 
 
-def _chain_dp(items: list, stats: IndexStats):
+def _chain_dp(items: list, stats: IndexStats, table=None):
     """Re-associate a join chain (order fixed, grouping free) by interval
     DP over estimated intermediate cardinalities.  Interval cardinality
     is computed once per interval (left-extension), so every grouping of
     the same interval shares one estimate and the DP is consistent.
-    Returns (plan tree, estimated cost)."""
+    Returns (plan tree, estimated cost) — cost in the table's ``cost_ns``
+    nanoseconds when one is present (each join step then pays its fitted
+    fixed stage constants, not just its rows), in rows otherwise."""
     n = len(items)
-    ests = [estimate_plan(it, stats) for it in items]
+    ests = [estimate_plan(it, stats, table) for it in items]
+    if table is None:
+        base = [e.cost for e in ests]
+
+        def step(left, right, out):
+            return left.pairs + right.pairs + out.pairs
+    else:
+        base = [e.cost_ns for e in ests]
+
+        def step(left, right, out):
+            return (table.stage_ns("materialize", left.pairs)
+                    + table.stage_ns("materialize", right.pairs)
+                    + table.stage_ns("join", out.pairs))
+
     if n == 1:
-        return items[0], ests[0].cost
+        return items[0], base[0]
     prof = [[None] * n for _ in range(n)]  # interval cardinality profile
     cost = [[0.0] * n for _ in range(n)]
     cut = [[0] * n for _ in range(n)]
     for i in range(n):
         prof[i][i] = ests[i]
-        cost[i][i] = ests[i].cost
+        cost[i][i] = base[i]
     for span in range(2, n + 1):
         for i in range(0, n - span + 1):
             j = i + span - 1
@@ -330,8 +396,7 @@ def _chain_dp(items: list, stats: IndexStats):
             best, best_m = None, i
             for m in range(i, j):
                 c = (cost[i][m] + cost[m + 1][j]
-                     + prof[i][m].pairs + prof[m + 1][j].pairs
-                     + prof[i][j].pairs)
+                     + step(prof[i][m], prof[m + 1][j], prof[i][j]))
                 if best is None or c < best:
                     best, best_m = c, m
             cost[i][j], cut[i][j] = best, best_m
@@ -371,7 +436,7 @@ def _flatten_conj(q: CPQ) -> list:
     return [q]
 
 
-def _opt(q: CPQ, k: int, stats: IndexStats, available):
+def _opt(q: CPQ, k: int, stats: IndexStats, available, table=None):
     if isinstance(q, Edge):
         return ("lookup", [(q.label,)])
     if isinstance(q, Identity):
@@ -381,12 +446,14 @@ def _opt(q: CPQ, k: int, stats: IndexStats, available):
         rest = [o for o in ops if not isinstance(o, Identity)]
         if not rest:
             return ("identity",)  # id ∩ id ∩ ... == id
-        plans = [_opt(o, k, stats, available) for o in rest]
+        plans = [_opt(o, k, stats, available, table) for o in rest]
         # ∩ is idempotent: identical operands (e.g. the shared edge of
         # the TT template) evaluate once
         deduped = {freeze_plan(p): p for p in plans}
         # commutative: smallest estimated operand first, so the running
         # intersection (the probed side) stays as small as possible
+        # (row-based on purpose: the smallest-first rule is about probe
+        # sizes, which stage constants don't change)
         keyed = []
         for frozen, p in deduped.items():
             e = estimate_plan(p, stats)
@@ -409,26 +476,34 @@ def _opt(q: CPQ, k: int, stats: IndexStats, available):
                 continue
             if run:
                 items.extend(("lookup", [s]) for s in
-                             _best_split(tuple(run), k, stats, available))
+                             _best_split(tuple(run), k, stats, available,
+                                         table))
                 run = []
             if leaf is not None:
-                items.append(_opt(leaf, k, stats, available))
+                items.append(_opt(leaf, k, stats, available, table))
         if len(items) == 1:
             return items[0]
-        tree, _ = _chain_dp(items, stats)
+        tree, _ = _chain_dp(items, stats, table)
         return _fuse_lookups(tree)
     raise TypeError(q)
 
 
-def optimize_query(q: CPQ, k: int, stats: IndexStats, available=None):
+def optimize_query(q: CPQ, k: int, stats: IndexStats, available=None,
+                   cost_table=None):
     """Compile an AST to a cost-optimized physical plan.
 
     Same contract as :func:`repro.core.query.plan_query` (the syntactic
     fallback), same plan language, same answers — only operator order,
     join association, and segment splits differ, chosen to minimize the
     cost model over ``stats``.  ``available`` restricts LOOKUP segments
-    exactly as in the syntactic planner (iaCPQx query-time splitting)."""
+    exactly as in the syntactic planner (iaCPQx query-time splitting).
+
+    ``cost_table`` (a :class:`~repro.core.costmodel.DeviceCostTable`)
+    switches the split/association objective from rows to calibrated
+    device nanoseconds; None keeps the row objective bit-for-bit — a
+    mispriced table can change capacities and plan choice but never
+    answers (the overflow ladder's contract)."""
     q = _strip_identity_joins(q)
     if isinstance(q, Identity):
         return ("identity",)
-    return _opt(q, k, stats, available)
+    return _opt(q, k, stats, available, cost_table)

@@ -1,0 +1,136 @@
+"""Pallas block-shape autotuner — the silicon half of the cost model.
+
+The kernel wrappers in ``ops.py`` historically picked block shapes by a
+power-of-two heuristic capped at a hard default (1024).  The right block
+is a device property — it balances grid parallelism against per-block
+launch overhead and VMEM residency — so this module measures it: for
+each capacity rung the engine's caps-ladder actually dispatches (see
+``core.costmodel.ladder_rungs``), every candidate block shape is timed
+against the raw kernels (``sorted_intersect.sorted_member_mask`` for
+``block_q``, ``expand_join.expand_join_gather`` for ``block_t``) on
+rung-sized synthetic int32 inputs, and the winners are cached in the
+:class:`~repro.core.costmodel.DeviceCostTable` keyed by rung.
+
+Answers never depend on the block shape (each candidate is asserted
+equal to the 1024 baseline during the sweep), so a stale table is a
+performance bug at worst — the same contract as the cost model's pricing
+half.
+
+Candidates stay multiples of 128 (the TPU int32 lane tile — see the
+Pallas guide) and never exceed the rung, mirroring the wrapper's
+``min(block, pow2(n))`` clamp.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+#: Block-shape candidates swept per rung.  128-multiple keeps TPU lane
+#: tiling exact; 2048 doubles the historical ceiling to let big rungs
+#: trade grid steps for per-block work.
+CANDIDATES = (256, 512, 1024, 2048)
+
+
+def _time_ns(fn, repeats: int = 3, warmup: int = 1) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e9)
+    return float(np.median(ts))
+
+
+def _pow2(n: int) -> int:
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+def sweep_block_q(rung: int, repeats: int = 3, candidates=CANDIDATES):
+    """Time ``sorted_member_mask`` at ``rung`` queries for each candidate
+    block; returns (winner, {block: ns}).  Results are asserted identical
+    across candidates — the sweep can only change speed."""
+    import jax.numpy as jnp
+
+    from . import sorted_intersect as _si
+
+    rung = _pow2(rung)
+    rng = np.random.default_rng(rung)
+    hay = jnp.asarray(np.sort(rng.choice(4 * rung, rung, replace=False))
+                      .astype(np.int32))
+    queries = jnp.asarray(rng.integers(0, 4 * rung, rung).astype(np.int32))
+    count = jnp.asarray(rung, jnp.int32)
+    timings: dict[int, float] = {}
+    baseline = None
+    for blk in candidates:
+        blk = min(blk, rung)
+        if rung % blk or blk in timings:
+            continue
+        out = _si.sorted_member_mask(hay, count, queries, block_q=blk)
+        if baseline is None:
+            baseline = np.asarray(out)
+        else:
+            assert np.array_equal(baseline, np.asarray(out)), blk
+        timings[blk] = _time_ns(
+            lambda b=blk: _si.sorted_member_mask(hay, count, queries,
+                                                 block_q=b), repeats)
+    winner = min(timings, key=timings.get)
+    return winner, timings
+
+
+def sweep_block_t(rung: int, repeats: int = 3, candidates=CANDIDATES):
+    """Time ``expand_join_gather`` producing ``rung`` output rows for
+    each candidate block; returns (winner, {block: ns})."""
+    import jax.numpy as jnp
+
+    from . import expand_join as _ej
+
+    rung = _pow2(rung)
+    # one match per probe: ends = 1..rung, lo = 0..rung-1 — a clean
+    # rung-sized gather whose cost is all in the kernel's tiling
+    ends = jnp.arange(1, rung + 1, dtype=jnp.int32)
+    lo = jnp.arange(rung, dtype=jnp.int32)
+    payload = jnp.arange(rung, dtype=jnp.int32)
+    total = jnp.asarray(rung, jnp.int32)
+    timings: dict[int, float] = {}
+    baseline = None
+    for blk in candidates:
+        blk = min(blk, rung)
+        if rung % blk or blk in timings:
+            continue
+        out = _ej.expand_join_gather(ends, lo, payload, payload, payload,
+                                     total, rung, block_t=blk)
+        got = np.stack([np.asarray(c) for c in out])
+        if baseline is None:
+            baseline = got
+        else:
+            assert np.array_equal(baseline, got), blk
+        timings[blk] = _time_ns(
+            lambda b=blk: _ej.expand_join_gather(
+                ends, lo, payload, payload, payload, total, rung,
+                block_t=b)[0], repeats)
+    winner = min(timings, key=timings.get)
+    return winner, timings
+
+
+def autotune(rungs, repeats: int = 3, candidates=CANDIDATES):
+    """Sweep both kernels over ``rungs``; returns ``(block_q, block_t,
+    raw)`` — two {rung: winner} dicts ready for the cost table, plus the
+    raw {(kind, rung, block): ns} timings for bench emission."""
+    block_q: dict[int, int] = {}
+    block_t: dict[int, int] = {}
+    raw: dict[tuple, float] = {}
+    for rung in sorted({_pow2(r) for r in rungs}):
+        wq, tq = sweep_block_q(rung, repeats, candidates)
+        wt, tt = sweep_block_t(rung, repeats, candidates)
+        block_q[rung] = wq
+        block_t[rung] = wt
+        for blk, ns in tq.items():
+            raw[("block_q", rung, blk)] = ns
+        for blk, ns in tt.items():
+            raw[("block_t", rung, blk)] = ns
+    return block_q, block_t, raw

@@ -3,6 +3,22 @@ and a jnp fallback when the problem exceeds the kernels' VMEM-resident
 assumptions (or when ``REPRO_DISABLE_PALLAS=1``).
 
 The engine calls these; tests sweep them against ``ref.py``.
+
+Two process-wide knobs feed this module from the device cost table
+(``core.costmodel``), both inert by default:
+
+* the **VMEM ceiling** — :func:`vmem_words` derives the broadcast-operand
+  residency budget from the backend (env ``REPRO_VMEM_WORDS`` wins, then
+  a table override installed by :func:`set_vmem_words_override`, then a
+  per-backend default) instead of a hard-coded constant;
+* **tuned block shapes** — :func:`set_tuned_blocks` installs the
+  autotuner's per-capacity-rung ``block_q``/``block_t`` winners
+  (``kernels.autotune``), consulted before the power-of-two heuristic.
+
+They are process-wide (not arguments) because these wrappers are called
+from inside jitted plan walkers where no host-side context can flow; a
+change only affects *future* traces — jit caches compiled with other
+blocks stay valid, just differently tuned.
 """
 
 from __future__ import annotations
@@ -21,9 +37,70 @@ from . import sorted_intersect as _si
 
 SENTINEL = np.int32(2**31 - 1)
 
-# VMEM-residency ceiling for the broadcast operands (int32 words); beyond
-# this the ops fall back to the XLA path, which tiles through HBM.
-_VMEM_WORDS = 1_000_000
+# Fallback VMEM-residency ceiling for the broadcast operands (int32
+# words) when neither the env override nor the backend probe decides;
+# beyond the ceiling the ops fall back to the XLA path, which tiles
+# through HBM.
+_DEFAULT_VMEM_WORDS = 1_000_000
+
+# TPU cores carry ~16 MiB VMEM; budget half of it for the broadcast
+# operands (the other half covers the blocked operand, accumulators and
+# double-buffering) -> 8 MiB / 4 B.
+_TPU_VMEM_WORDS = (8 * 1024 * 1024) // 4
+
+_vmem_override: int | None = None  # set_vmem_words_override (cost table)
+_vmem_probed: int | None = None  # cached backend probe
+_tuned_block_q: dict[int, int] | None = None  # rung -> block
+_tuned_block_t: dict[int, int] | None = None
+
+
+def set_vmem_words_override(words: int | None) -> None:
+    """Install (or with None clear) a cost-table-provided VMEM ceiling.
+    The ``REPRO_VMEM_WORDS`` env var still wins — it is the operator's
+    explicit knob."""
+    global _vmem_override
+    _vmem_override = None if words is None else int(words)
+
+
+def vmem_words() -> int:
+    """The broadcast-operand residency ceiling, in int32 words.
+
+    Resolution order: ``REPRO_VMEM_WORDS`` env (read live, so tests can
+    monkeypatch it per-case), then the installed cost-table override,
+    then a cached per-backend default (TPU budgets half a core's ~16 MiB
+    VMEM; CPU/GPU interpret or re-tile, so the conservative historical
+    ceiling stands).
+    """
+    env = os.environ.get("REPRO_VMEM_WORDS")
+    if env:
+        return int(env)
+    if _vmem_override is not None:
+        return _vmem_override
+    global _vmem_probed
+    if _vmem_probed is None:
+        _vmem_probed = (_TPU_VMEM_WORDS if jax.default_backend() == "tpu"
+                        else _DEFAULT_VMEM_WORDS)
+    return _vmem_probed
+
+
+def set_tuned_blocks(block_q: dict[int, int] | None,
+                     block_t: dict[int, int] | None) -> None:
+    """Install the autotuner's per-rung block winners ({pow2 rung ->
+    block size}, from ``DeviceCostTable.block_q``/``block_t``); None/None
+    clears back to the power-of-two heuristic."""
+    global _tuned_block_q, _tuned_block_t
+    _tuned_block_q = dict(block_q) if block_q else None
+    _tuned_block_t = dict(block_t) if block_t else None
+
+
+def _tuned(table: dict[int, int] | None, rung: int) -> int | None:
+    """Winner at the smallest tuned rung >= ``rung`` (capacities
+    quantize onto the pow2 ladder, so that neighbor is exact for ladder
+    traffic), else the largest tuned rung's winner."""
+    if not table:
+        return None
+    geq = [r for r in table if r >= rung]
+    return table[min(geq)] if geq else table[max(table)]
 
 
 def _pallas_enabled() -> bool:
@@ -39,10 +116,12 @@ def _pad_to(x: jax.Array, n: int, fill) -> jax.Array:
 
 def sorted_member_mask(hay, hay_count, queries, block_q: int = 1024):
     """0/1 membership of queries in sorted hay[:hay_count]."""
-    if not _pallas_enabled() or hay.shape[0] > _VMEM_WORDS:
+    if not _pallas_enabled() or hay.shape[0] > vmem_words():
         return ref.sorted_member_mask(hay, hay_count, queries)
     n_q = queries.shape[0]
-    blk = min(block_q, max(8, 1 << (n_q - 1).bit_length()))
+    rung = max(8, 1 << (n_q - 1).bit_length())
+    tuned = _tuned(_tuned_block_q, rung)
+    blk = min(tuned if tuned is not None else block_q, rung)
     n_pad = ((n_q + blk - 1) // blk) * blk
     q = _pad_to(queries, n_pad, SENTINEL)
     out = _si.sorted_member_mask(hay, hay_count, q, block_q=blk)
@@ -52,10 +131,12 @@ def sorted_member_mask(hay, hay_count, queries, block_q: int = 1024):
 def expand_join_gather(ends, lo, a_payload, b_v, b_u, total, out_capacity,
                        block_t: int = 1024):
     if (not _pallas_enabled()
-            or ends.shape[0] + 2 * b_v.shape[0] > _VMEM_WORDS):
+            or ends.shape[0] + 2 * b_v.shape[0] > vmem_words()):
         return ref.expand_join_gather(ends, lo, a_payload, b_v, b_u, total,
                                       out_capacity)
-    blk = min(block_t, max(8, 1 << (out_capacity - 1).bit_length()))
+    rung = max(8, 1 << (out_capacity - 1).bit_length())
+    tuned = _tuned(_tuned_block_t, rung)
+    blk = min(tuned if tuned is not None else block_t, rung)
     cap = ((out_capacity + blk - 1) // blk) * blk
     ov, ou, oa = _ej.expand_join_gather(ends, lo, a_payload, b_v, b_u, total,
                                         cap, block_t=blk)
@@ -71,7 +152,7 @@ def fingerprint_rows(cols: tuple, salt: int = 0):
 
 def segment_softmax(scores, segment_ids, num_segments, eps: float = 1e-9):
     e = scores.shape[0]
-    if (not _pallas_enabled() or num_segments * scores.shape[1] > _VMEM_WORDS
+    if (not _pallas_enabled() or num_segments * scores.shape[1] > vmem_words()
             or e % min(512, e) != 0):
         return ref.segment_softmax(scores, segment_ids, num_segments, eps)
     return _ss.segment_softmax(scores, segment_ids, num_segments, eps=eps)
