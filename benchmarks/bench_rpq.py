@@ -1,0 +1,133 @@
+"""RPQ fixpoint serving (PR 9): Cypher-subset queries lowered to
+automaton fixpoints of per-sequence CPQx lookups.
+
+Workload: variable-length/alternation path queries (openCypher text,
+``l<k>`` positional types) lowered by ``core.cypher`` — pure-CPQ shapes
+ride ``Engine.execute``, the rest run as Glushkov fixpoints through
+``Engine.execute_rpq``.  Reported per query: wall time, fixpoint
+iterations, distinct per-sequence lookups and dispatch rounds
+(``FixpointInfo``).
+
+Correctness gates (the bench fails, not just reports):
+
+* every query — CPQ or RPQ — must equal the independent Thompson
+  NFA-product oracle (``oracle.rpq_eval`` / ``oracle.cpq_eval``);
+* at least one star query must converge in **more than one** fixpoint
+  iteration (a 1-iteration star means the workload never exercised the
+  semi-naive loop — the bench would be vacuous);
+* every fixpoint must respect the |Q|·|V|² iteration bound.
+
+    PYTHONPATH=src python -m benchmarks.bench_rpq [--smoke] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import index as cindex, oracle
+from repro.core.cypher import lower_cypher, parse_cypher
+from repro.core.engine import Engine
+from repro.core.rpq import FixpointInfo
+from repro.core.service import QueryService
+
+from .common import DATASETS, emit, write_json
+
+# Cypher-subset workload over positional types (dataset-agnostic; every
+# DATASETS graph has >= 2 base labels).  Star shapes first — they drive
+# the fixpoint loop; the tail shapes cover alternation, inverse
+# direction, bounded repeats and the pure-CPQ lowering path.
+WORKLOAD = [
+    "MATCH (a)-[:l0*]->(b) RETURN a, b",
+    "MATCH (a)-[:l0*0..]->(b) RETURN a, b",
+    "MATCH (a)-[:l0|l1*]->(b) RETURN a, b",
+    "MATCH (a)<-[:l0*1..3]-(b) RETURN a, b",
+    "MATCH (a)-[:l0]->(b)-[:l1*0..]->(c) RETURN a, c",
+    "MATCH (a)-[:l0*2..3]->(b)-[:l1]->(c) RETURN a, c",
+    "MATCH (a)-[:l0]->(b)-[:l1]->(c) RETURN a, c",  # pure CPQ
+]
+
+
+def _pairs(rows) -> set:
+    return {tuple(r) for r in np.asarray(rows).reshape(-1, 2).tolist()}
+
+
+def run_dataset(ds: str, iters: int) -> None:
+    g = DATASETS[ds]()
+    engine = Engine(cindex.build(g, 2))
+    svc = QueryService(engine, max_batch=len(WORKLOAD))
+
+    star_multi_iter = 0
+    for text in WORKLOAD:
+        low = lower_cypher(parse_cypher(text), None, g.n_labels)
+        tag = "cpq" if low.is_cpq else "rpq"
+        info = FixpointInfo()
+
+        if low.is_cpq:
+            run = lambda q=low.ast: engine.execute(q)
+            want = oracle.cpq_eval(g, low.ast)
+            rows = run()  # warmup: compile
+        else:
+            run = lambda q=low.ast: engine.execute_rpq(q)
+            want = oracle.rpq_eval(g, low.ast)
+            # warmup (compile + relation fetch) doubles as the telemetry
+            # run — one fixpoint's counters, not warmup + iters summed
+            rows = engine.execute_rpq(low.ast, info=info)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        us = float(np.min(ts)) * 1e6
+
+        # -------- gates ------------------------------------------------ #
+        assert _pairs(rows) == want, f"engine != oracle: {text}"
+        derived = f"kind={tag};answers={len(want)}"
+        if not low.is_cpq:
+            bound = info.states * g.n_vertices ** 2
+            assert info.iterations <= bound, f"bound exceeded: {text}"
+            derived += (f";iters={info.iterations};lookups={info.lookups}"
+                        f";batches={info.lookup_batches}"
+                        f";macro_edges={info.macro_edges}")
+            if "*]" in text or "*0..]" in text:
+                star_multi_iter = max(star_multi_iter, info.iterations)
+
+        # the serving path must agree with the direct path (RPQs ride
+        # the same (epoch, query) cache and drain rounds as CPQs)
+        req = svc.submit(low.ast)
+        if not req.done:
+            svc.flush()
+        assert _pairs(req.result) == want, f"service != oracle: {text}"
+
+        emit(f"rpq/{ds}/{text[:40].replace(',', ';')}", us, derived)
+
+    assert star_multi_iter > 1, (
+        "no star query needed more than one fixpoint iteration — the "
+        "workload never exercised the semi-naive loop")
+    emit(f"rpq/{ds}/acceptance", 0.0,
+         f"oracle=PASS;star_iters={star_multi_iter};served={len(WORKLOAD)}")
+    jax.clear_caches()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="example graph only, minimal iterations (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="serialize emitted rows (CI artifact)")
+    args, _ = ap.parse_known_args()
+
+    if args.smoke:
+        run_dataset("example", iters=1)
+    else:
+        for ds in ("example", "gmark-small"):
+            run_dataset(ds, iters=5)
+    if args.json:
+        write_json(args.json, bench="rpq", smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

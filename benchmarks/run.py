@@ -30,6 +30,7 @@ BENCHES = {
     "adaptive": "benchmarks.bench_adaptive",  # drifting-workload mining (PR 5)
     "recovery": "benchmarks.bench_recovery",  # kill-and-recover TTFCA (PR 6)
     "serving": "benchmarks.bench_serving",  # multi-tenant SLO serving (PR 7)
+    "rpq": "benchmarks.bench_rpq",  # RPQ fixpoints + Cypher surface (PR 9)
 }
 
 

@@ -289,6 +289,23 @@ class Engine:
                 self.telemetry.default_jumps += 1
         raise RuntimeError("query overflow not resolved after retries")
 
+    def execute_rpq(self, q, srcs=None, dsts=None,
+                    n_labels: int | None = None,
+                    info=None) -> np.ndarray:
+        """Evaluate a regular path query (:mod:`repro.core.rpq` AST) as
+        an automaton fixpoint of per-sequence lookups; returns (n, 2)
+        s-t pairs like :meth:`execute`.  Every device dispatch inside
+        the fixpoint is an ordinary :meth:`execute_batch` round, so the
+        capacity ladder, telemetry, the optimizer's query-time splits
+        and (on a mesh engine) the sharded backend all apply unchanged.
+        ``srcs``/``dsts`` pin the endpoints (the Cypher ``WHERE``
+        lowering); ``info`` (an ``rpq.FixpointInfo``) captures iteration
+        telemetry."""
+        from .rpq import evaluate  # engine <- rpq is one-way at runtime
+
+        return evaluate(self, q, srcs=srcs, dsts=dsts,
+                        n_labels=n_labels, info=info)
+
     def _escalate(self, caps: QueryCaps, attempt: int) -> QueryCaps:
         """Overflow-retry schedule (the host half of the ladder contract
         in the ``core.backend`` docstring): double, and after a few

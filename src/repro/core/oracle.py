@@ -456,3 +456,152 @@ def random_cpq(rng: np.random.Generator, g: LabeledGraph, max_depth: int = 3) ->
     if rng.random() < 0.5:
         return Join(l, r)
     return Conj(l, r)
+
+
+# ---------------------------------------------------------------------- #
+# RPQ reference evaluator — Thompson NFA product (ground truth for
+# core.rpq's Glushkov/fixpoint path, exactly like cpq_eval gates CPQ).
+#
+# Deliberately a DIFFERENT construction and evaluation strategy from the
+# engine: ε-transitions (Thompson) instead of a position automaton, and
+# single-edge product-graph BFS per source instead of a semi-naive
+# fixpoint of k-truncated per-sequence lookups — a shared bug would have
+# to live in two unrelated algorithms to survive the differential gate.
+# ---------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class _ThompsonNFA:
+    """ε-NFA: ``eps[s]`` = ε-successors, ``trans[s]`` = {label: set of
+    successors}; one start, one accept state."""
+
+    eps: list
+    trans: list
+    start: int
+    accept: int
+
+
+def _thompson_nfa(q, n_labels: int) -> _ThompsonNFA:
+    from .rpq import RAlt, RConcat, RInv, ROpt, RPlus, RStar, RSym
+
+    eps: list[set] = []
+    trans: list[dict] = []
+
+    def new_state() -> int:
+        eps.append(set())
+        trans.append({})
+        return len(eps) - 1
+
+    def inv_push(node, flip: bool):
+        """Independent inverse push-down: a flipped subtree reverses
+        concatenation order and maps each label through the closure
+        involution l <-> l + n_labels."""
+        if isinstance(node, RSym):
+            lbl = (node.label + n_labels) % (2 * n_labels) if flip \
+                else node.label
+            return RSym(int(lbl))
+        if isinstance(node, RInv):
+            return inv_push(node.inner, not flip)
+        if isinstance(node, RConcat):
+            l, r = inv_push(node.lhs, flip), inv_push(node.rhs, flip)
+            return RConcat(r, l) if flip else RConcat(l, r)
+        if isinstance(node, RAlt):
+            return RAlt(inv_push(node.lhs, flip), inv_push(node.rhs, flip))
+        if isinstance(node, (RStar, RPlus, ROpt)):
+            return type(node)(inv_push(node.inner, flip))
+        raise TypeError(f"not an RPQ node: {node!r}")
+
+    def frag(node) -> tuple[int, int]:
+        if isinstance(node, RSym):
+            s, a = new_state(), new_state()
+            trans[s].setdefault(int(node.label), set()).add(a)
+            return s, a
+        if isinstance(node, RConcat):
+            s1, a1 = frag(node.lhs)
+            s2, a2 = frag(node.rhs)
+            eps[a1].add(s2)
+            return s1, a2
+        if isinstance(node, RAlt):
+            s, a = new_state(), new_state()
+            for side in (node.lhs, node.rhs):
+                si, ai = frag(side)
+                eps[s].add(si)
+                eps[ai].add(a)
+            return s, a
+        if isinstance(node, RStar):
+            s, a = new_state(), new_state()
+            si, ai = frag(node.inner)
+            eps[s] |= {si, a}
+            eps[ai] |= {si, a}
+            return s, a
+        if isinstance(node, RPlus):
+            si, ai = frag(node.inner)
+            eps[ai].add(si)
+            return si, ai
+        if isinstance(node, ROpt):
+            s, a = new_state(), new_state()
+            si, ai = frag(node.inner)
+            eps[s] |= {si, a}
+            eps[ai].add(a)
+            return s, a
+        raise TypeError(f"not a normalized RPQ node: {node!r}")
+
+    start, accept = frag(inv_push(q, False))
+    return _ThompsonNFA(eps=eps, trans=trans, start=start, accept=accept)
+
+
+def rpq_eval(g: LabeledGraph, q, srcs=None, dsts=None) -> set[tuple[int, int]]:
+    """⟦q⟧_G for an RPQ ``q`` (:mod:`repro.core.rpq` AST): all (v, u)
+    with a path v→u whose label sequence the expression accepts (ε
+    accepted ⇒ the identity pairs, matching ``cpq_eval(Identity)``).
+    ``srcs``/``dsts`` restrict the endpoints (the Cypher pins)."""
+    nfa = _thompson_nfa(q, g.n_labels)
+    out_edges: dict[int, list] = defaultdict(list)
+    for s, d, l in zip(g.src, g.dst, g.lbl):
+        out_edges[int(s)].append((int(d), int(l)))
+    seeds = range(g.n_vertices) if srcs is None else sorted(set(srcs))
+    results: set[tuple[int, int]] = set()
+    for v in seeds:
+        seen = set()
+        stack = [(v, nfa.start)]
+        while stack:
+            u, s = stack.pop()
+            if (u, s) in seen:
+                continue
+            seen.add((u, s))
+            for t in nfa.eps[s]:
+                stack.append((u, t))
+            for (w, l) in out_edges[u]:
+                for t in nfa.trans[s].get(l, ()):
+                    stack.append((w, t))
+        for (u, s) in seen:
+            if s == nfa.accept:
+                results.add((v, u))
+    if dsts is not None:
+        pins = set(dsts)
+        results = {(v, u) for v, u in results if u in pins}
+    return results
+
+
+def random_rpq(rng: np.random.Generator, g: LabeledGraph,
+               max_depth: int = 3):
+    """Random RPQ generator for property tests (star/plus/optional kept
+    shallow — macro-edge fan-out is exponential in nesting)."""
+    from .rpq import RAlt, RConcat, RInv, ROpt, RPlus, RStar, RSym
+
+    if max_depth == 0 or rng.random() < 0.3:
+        return RSym(int(rng.integers(0, g.alphabet_size)))
+    r = rng.random()
+    if r < 0.30:
+        return RConcat(random_rpq(rng, g, max_depth - 1),
+                       random_rpq(rng, g, max_depth - 1))
+    if r < 0.50:
+        return RAlt(random_rpq(rng, g, max_depth - 1),
+                    random_rpq(rng, g, max_depth - 1))
+    if r < 0.65:
+        return RStar(random_rpq(rng, g, max_depth - 1))
+    if r < 0.75:
+        return RPlus(random_rpq(rng, g, max_depth - 1))
+    if r < 0.87:
+        return ROpt(random_rpq(rng, g, max_depth - 1))
+    return RInv(random_rpq(rng, g, max_depth - 1))

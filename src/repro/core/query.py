@@ -100,19 +100,33 @@ _TOKEN = re.compile(
 
 def parse(text: str, label_ids: dict[str, int] | None, n_labels: int) -> CPQ:
     """Parse concrete CPQ syntax.  ``label_ids`` maps base-label names to
-    base ids; ``None`` enables only the ``l<k>`` positional form."""
+    base ids; ``None`` enables only the ``l<k>`` positional form.
+
+    Every ``SyntaxError`` reports the character position of the
+    offending token so a malformed query in a long workload file is
+    locatable without bisection."""
     tokens = []
     pos = 0
     while pos < len(text):
         m = _TOKEN.match(text, pos)
         if not m or m.end() == pos:
             if text[pos:].strip():
-                raise SyntaxError(f"bad token at: {text[pos:]!r}")
+                raise SyntaxError(
+                    f"bad token at position {pos}: {text[pos:]!r}")
             break
         pos = m.end()
         tokens.append(m)
 
     idx = 0
+
+    def where() -> str:
+        """Location suffix for the current token (or end of input)."""
+        if idx < len(tokens):
+            t = tokens[idx]
+            for g in ("lpar", "rpar", "join", "conj", "name"):
+                if t.group(g) is not None:
+                    return f"at position {t.start(g)}"
+        return f"at end of input (position {len(text)})"
 
     def peek(kind):
         return idx < len(tokens) and tokens[idx].group(kind)
@@ -139,29 +153,30 @@ def parse(text: str, label_ids: dict[str, int] | None, n_labels: int) -> CPQ:
             idx += 1
             node = expr()
             if not peek("rpar"):
-                raise SyntaxError("expected ')'")
+                raise SyntaxError(f"expected ')' {where()}")
             idx += 1
             return node
         name = peek("name")
         if not name:
-            raise SyntaxError("expected label, 'id' or '('")
+            raise SyntaxError(f"expected label, 'id' or '(' {where()}")
         inv = tokens[idx].group("inv")
-        idx += 1
         if name == "id" and not inv:
+            idx += 1
             return Identity()
         if label_ids and name in label_ids:
             base = label_ids[name]
         elif re.fullmatch(r"l\d+", name):
             base = int(name[1:])
         else:
-            raise SyntaxError(f"unknown label {name!r}")
+            raise SyntaxError(f"unknown label {name!r} {where()}")
         if base >= n_labels:
-            raise SyntaxError(f"label id {base} out of range")
+            raise SyntaxError(f"label id {base} out of range {where()}")
+        idx += 1
         return Edge(base + n_labels if inv else base)
 
     node = expr()
     if idx != len(tokens):
-        raise SyntaxError("trailing tokens")
+        raise SyntaxError(f"trailing tokens {where()}")
     return node
 
 

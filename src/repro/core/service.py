@@ -56,6 +56,16 @@ Multi-tenant serving (PR 7): every request carries a ``tenant`` id
   (``core.backend.run_union_batch``), so heterogeneous tenant traffic
   stops serializing into per-shape dispatches.
 
+RPQ serving (PR 9): requests whose query is an :class:`repro.core.rpq.RPQ`
+ride the same queue, admission control, tenancy accounting, and
+(epoch, query)-keyed result cache — RPQ nodes are frozen dataclasses, so
+they are hashable cache keys like CPQ ASTs.  They skip the plan cache
+(there is no single physical plan; the fixpoint re-plans its per-sequence
+lookups each iteration) and are evaluated in ``_finalize_round`` after the
+shaped CPQ batch, via :meth:`Engine.execute_rpq` — each fixpoint iteration
+is itself an ``execute_batch`` of CPQx lookups, so RPQs reuse the capacity
+ladder and device cost model rather than bypassing them.
+
 A graph update re-enters the service two ways:
 
 * **rebind path** — any fresh :class:`CPQxIndex` (a from-scratch rebuild
@@ -118,6 +128,7 @@ import numpy as np
 from .engine import Engine, QueryCaps
 from .index import CPQxIndex
 from .query import CPQ, plan_shape
+from .rpq import RPQ
 from .workload import DEFAULT_TENANT
 
 
@@ -194,8 +205,9 @@ class _Round:
     reqs: list  # every request taken this round (incl. cache hits)
     todo: list  # the subset needing device execution
     by_query: dict
-    queries: list
+    queries: list  # distinct CPQ queries (the shaped/union batch)
     plans: list
+    rpq_queries: list  # distinct RPQ queries (fixpoint evaluation)
     handle: object = None
 
 
@@ -425,8 +437,10 @@ class QueryService:
             for t, w in per_tenant.items():
                 self._observe(q, weight=w, tick=first, tenant=t)
                 first = False
-        plans = [self._plan(q) for q in queries]
-        return _Round(batch, todo, by_query, queries, plans)
+        cpq_queries = [q for q in queries if not isinstance(q, RPQ)]
+        rpq_queries = [q for q in queries if isinstance(q, RPQ)]
+        plans = [self._plan(q) for q in cpq_queries]
+        return _Round(batch, todo, by_query, cpq_queries, plans, rpq_queries)
 
     def _dispatch_round(self, rnd: _Round) -> None:
         if rnd.queries:
@@ -437,15 +451,24 @@ class QueryService:
     def _finalize_round(self, rnd: _Round) -> list[QueryRequest]:
         """Device-side half: harvest the dispatched round (driving the
         overflow ladder), publish results to caches and requests."""
-        if rnd.queries:
-            rows = self.engine.harvest_batch(rnd.handle,
-                                             max_retries=self.max_retries)
-            self.stats.shape_buckets += len({plan_shape(p)
-                                             for p in rnd.plans})
-            self.stats.executed += len(rnd.queries)
-            self.stats.deduped += len(rnd.todo) - len(rnd.queries)
+        if rnd.queries or rnd.rpq_queries:
+            rows = []
+            if rnd.queries:
+                rows = self.engine.harvest_batch(
+                    rnd.handle, max_retries=self.max_retries)
+                self.stats.shape_buckets += len({plan_shape(p)
+                                                 for p in rnd.plans})
+            # RPQ fixpoints run after the shaped batch: each iteration's
+            # frontier expansion is itself a batch of per-sequence CPQx
+            # lookups through the same capacity ladder, so they reuse the
+            # device path rather than bypassing it.
+            rpq_rows = [self.engine.execute_rpq(q) for q in rnd.rpq_queries]
+            self.stats.executed += len(rnd.queries) + len(rnd.rpq_queries)
+            self.stats.deduped += (len(rnd.todo) - len(rnd.queries)
+                                   - len(rnd.rpq_queries))
             now = time.perf_counter()
-            for q, res in zip(rnd.queries, rows):
+            for q, res in zip(rnd.queries + rnd.rpq_queries,
+                              list(rows) + rpq_rows):
                 self._cache_put(q, res)
                 for req in rnd.by_query[q]:
                     req.result, req.done, req.t_done = res, True, now

@@ -85,7 +85,17 @@ def harvest_sequences(q: CPQ, k: int) -> list:
     Windows — not just maximal runs — because the planner may serve a
     long chain from *any* valid <= k segmentation: a hot ``a.b.c.d``
     workload at k=2 is evidence for (a,b), (b,c) and (c,d) alike, and
-    the benefit model decides which segmentation is worth indexing."""
+    the benefit model decides which segmentation is worth indexing.
+
+    RPQ queries vote too: their maximal concatenation label runs (star
+    and plus bodies included — a hot ``(a.b)*`` fixpoint hits the
+    ``(a, b)`` lookup every iteration) go through the same window
+    expansion."""
+    from .rpq import RPQ, rpq_label_runs
+
+    if isinstance(q, RPQ):
+        runs = [list(r) for r in rpq_label_runs(q)]
+        return _expand_windows(runs, k)
     runs: list[list[int]] = []
 
     def walk(node: CPQ) -> None:
@@ -115,6 +125,10 @@ def harvest_sequences(q: CPQ, k: int) -> list:
         raise TypeError(node)
 
     walk(q)
+    return _expand_windows(runs, k)
+
+
+def _expand_windows(runs: list, k: int) -> list:
     out: list = []
     for run in runs:
         for w in range(2, k + 1):

@@ -1,0 +1,322 @@
+"""openCypher-subset surface — parser goldens, lowering, round-trip.
+
+Corpus-style shapes (the path-query core of SNIPPETS.md Snippet 1's
+openCypher corpus) must parse and lower correctly; everything outside
+the subset — the clauses the corpus actually uses: ``WITH``, ``ORDER
+BY``, ``LIMIT``, node labels, property maps, aggregates — must raise
+:class:`UnsupportedCypher` *naming the construct*.  Pure-CPQ shapes must
+produce byte-identical plans to the existing ``parse()``/``plan_query``
+path (the language-aware lowering contract), and
+``parse_cypher(render_cypher(q)) == q`` is the round-trip property."""
+
+import numpy as np
+import pytest
+
+from repro.core import index as cindex, oracle
+from repro.core.cypher import (
+    CypherQuery,
+    Rel,
+    UnsupportedCypher,
+    lower_cypher,
+    parse_cypher,
+    render_cypher,
+)
+from repro.core.engine import Engine
+from repro.core.graph import inverse_label
+from repro.core.query import Conj, Edge, Identity, Join, parse, plan_query
+from repro.core.rpq import (
+    RAlt,
+    RConcat,
+    ROpt,
+    RPlus,
+    RPQ,
+    RStar,
+    RSym,
+)
+
+from conftest import random_graph
+
+LABELS = {"f": 0, "v": 1}  # example_graph's follows / visits
+
+
+def _pairs(rows) -> set:
+    return {tuple(r) for r in np.asarray(rows).reshape(-1, 2).tolist()}
+
+
+# ---------------------------------------------------------------------- #
+# parser goldens
+# ---------------------------------------------------------------------- #
+
+
+class TestParserGoldens:
+    def test_fixed_chain(self):
+        q = parse_cypher("MATCH (a)-[:f]->(b)-[:v]->(c) RETURN a, c")
+        assert q == CypherQuery(
+            nodes=("a", "b", "c"),
+            rels=(Rel(("f",)), Rel(("v",))),
+            returns=("a", "c"))
+
+    def test_variable_length_forms(self):
+        cases = {
+            "*": (1, None),
+            "*2": (2, 2),
+            "*1..3": (1, 3),
+            "*2..": (2, None),
+            "*..3": (1, 3),
+            "*0..": (0, None),
+        }
+        for star, (lo, hi) in cases.items():
+            q = parse_cypher(f"MATCH (a)-[:f{star}]->(b) RETURN a, b")
+            assert (q.rels[0].lo, q.rels[0].hi) == (lo, hi), star
+
+    def test_inverse_direction(self):
+        q = parse_cypher("MATCH (a)<-[:f]-(b) RETURN a, b")
+        assert q.rels[0].back
+
+    def test_multi_type_and_legacy_pipe(self):
+        for text in ("MATCH (a)-[:f|v]->(b) RETURN a, b",
+                     "MATCH (a)-[:f|:v]->(b) RETURN a, b"):
+            assert parse_cypher(text).rels[0].types == ("f", "v")
+
+    def test_where_pins_and_id_synonym(self):
+        q = parse_cypher(
+            "MATCH (a)-[:f]->(b) WHERE a = 3 AND id(b) = 7 RETURN a, b")
+        assert q.pins == (("a", 3), ("b", 7))
+
+    def test_return_star_and_anonymous_nodes(self):
+        q = parse_cypher("MATCH (a)-[:f]->()-[:v]->(c) RETURN *")
+        assert q.nodes == ("a", "", "c") and q.returns == ()
+
+    def test_relationship_variable_ignored(self):
+        q = parse_cypher("MATCH (a)-[r:f]->(b) RETURN a, b")
+        assert q.rels == (Rel(("f",)),)
+
+    def test_trailing_semicolon(self):
+        parse_cypher("MATCH (a)-[:f]->(b) RETURN a, b;")
+
+    def test_syntax_errors_carry_position(self):
+        for text in ("FETCH (a)-[:f]->(b) RETURN a, b",
+                     "MATCH (a)-[:f]->(b RETURN a, b",
+                     "MATCH (a)-[:f*3..1]->(b) RETURN a, b",
+                     "MATCH (a)<-[:f]->(b) RETURN a, b"):
+            with pytest.raises(SyntaxError, match="position"):
+                parse_cypher(text)
+
+
+class TestUnsupportedNamesTheConstruct:
+    """Real corpus clauses must be rejected with the clause named —
+    a caller porting a workload learns exactly what to rewrite."""
+
+    CASES = [
+        ("MATCH (a)-[:f]->(b) RETURN a, b LIMIT 10", "LIMIT"),
+        ("MATCH (a)-[:f]->(b) RETURN a, b ORDER BY a", "ORDER BY"),
+        ("MATCH (a)-[:f]->(b) WITH a MATCH (a)-[:v]->(c) RETURN a, c",
+         "WITH"),
+        ("OPTIONAL MATCH (a)-[:f]->(b) RETURN a, b", "OPTIONAL MATCH"),
+        ("MATCH (a)-[:f]->(b) RETURN count(a)", "count"),
+        ("MATCH (c:Concept)-[:f]->(b) RETURN c, b", "node label"),
+        ("MATCH (a {name: 'x'})-[:f]->(b) RETURN a, b", "property map"),
+        ("MATCH (a)-[]->(b) RETURN a, b", "untyped relationship"),
+        ("MATCH (a)-[:f]-(b) RETURN a, b", "undirected relationship"),
+        ("MATCH (a) RETURN a", "single-node MATCH"),
+        ("MATCH (a)-[:f]->(b) WHERE a.name = 3 RETURN a, b",
+         "property predicate"),
+        ("MATCH (a)-[:f]->(b)-[:v]->(c) WHERE b = 2 RETURN a, c",
+         "interior node"),
+        ("MATCH (a)-[:f]->(b) RETURN a.name, b", "property projection"),
+        ("MATCH (a)-[:f]->(b) RETURN a AS x, b", "AS alias"),
+        ("MATCH (a)-[:f]->(b)-[:v]->(c) RETURN a, b", "RETURN"),
+        ("MATCH (a)-[:f]->(b) RETURN DISTINCT a, b", "DISTINCT"),
+        ("MATCH (a)-[:f]->(b) DELETE a", "DELETE"),
+    ]
+
+    def test_each_construct_is_named(self):
+        for text, construct in self.CASES:
+            with pytest.raises(UnsupportedCypher) as e:
+                parse_cypher(text)
+            assert construct.lower() in str(e.value).lower(), text
+
+
+# ---------------------------------------------------------------------- #
+# lowering
+# ---------------------------------------------------------------------- #
+
+
+class TestLowering:
+    def test_pure_cpq_is_byte_identical_to_parse(self, ex_graph):
+        """The language-aware contract: a star-free single-type chain
+        lowers to the *same AST* as ``parse()``, hence the same frozen
+        plan — the optimizer/plan-cache path is untouched."""
+        n = ex_graph.n_labels
+        cases = [
+            ("MATCH (a)-[:f]->(b)-[:v]->(c) RETURN a, c", "f.v"),
+            ("MATCH (a)<-[:f]-(b)-[:f]->(c) RETURN a, c", "f-.f"),
+            ("MATCH (a)-[:f]->(b) RETURN a, b", "f"),
+        ]
+        for text, cpq_text in cases:
+            low = lower_cypher(parse_cypher(text), LABELS, n)
+            want = parse(cpq_text, LABELS, n)
+            assert low.is_cpq and low.ast == want, text
+            assert plan_query(low.ast, 2) == plan_query(want, 2), text
+
+    def test_closed_chain_lowers_to_identity_conj(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:f]->(b)-[:v]->(a) RETURN a"),
+            LABELS, ex_graph.n_labels)
+        assert low.ast == Conj(Join(Edge(0), Edge(1)), Identity())
+
+    def test_star_lowers_to_rpq(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:f*]->(b) RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        assert isinstance(low.ast, RPQ)
+        assert low.ast == RPlus(RSym(0))
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:f*0..]->(b) RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        assert low.ast == RStar(RSym(0))
+
+    def test_bounded_repeat_expansion(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:f*1..3]->(b) RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        e = RSym(0)
+        assert low.ast == RConcat(RConcat(e, ROpt(e)), ROpt(e))
+
+    def test_inverse_direction_uses_closure_label(self, ex_graph):
+        n = ex_graph.n_labels
+        low = lower_cypher(
+            parse_cypher("MATCH (a)<-[:f*]-(b) RETURN a, b"),
+            LABELS, n)
+        assert low.ast == RPlus(RSym(int(inverse_label(0, n))))
+
+    def test_multi_type_lowers_to_alternation(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:f|v*]->(b) RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        assert low.ast == RPlus(RAlt(RSym(0), RSym(1)))
+
+    def test_pins_surface_on_lowered_query(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher(
+                "MATCH (a)-[:f*]->(b) WHERE a = 2 AND b = 5 RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        assert (low.src, low.dst) == (2, 5)
+
+    def test_lowering_rejections(self, ex_graph):
+        n = ex_graph.n_labels
+        for text, construct in [
+            ("MATCH (a)-[:f*]->(b)-[:v]->(a) RETURN a",
+             "cyclic variable-length"),
+            ("MATCH (a)-[:f]->(b)-[:v]->(b)-[:f]->(c) RETURN a, c",
+             "repeated interior"),
+            ("MATCH (a)-[:f*0..0]->(b) RETURN a, b", "zero-length"),
+            ("MATCH (a)-[:nope]->(b) RETURN a, b", "unknown relationship"),
+        ]:
+            with pytest.raises(UnsupportedCypher) as e:
+                lower_cypher(parse_cypher(text), LABELS, n)
+            assert construct in str(e.value), text
+
+    def test_positional_label_names(self, ex_graph):
+        low = lower_cypher(
+            parse_cypher("MATCH (a)-[:l0]->(b)-[:l1]->(c) RETURN a, c"),
+            None, ex_graph.n_labels)
+        assert low.ast == Join(Edge(0), Edge(1))
+
+
+# ---------------------------------------------------------------------- #
+# end-to-end: cypher -> lowering -> engine == oracle
+# ---------------------------------------------------------------------- #
+
+
+class TestEndToEnd:
+    QUERIES = [
+        "MATCH (a)-[:f]->(b)-[:v]->(c) RETURN a, c",
+        "MATCH (a)-[:f*]->(b) RETURN a, b",
+        "MATCH (a)-[:f*0..]->(b) RETURN a, b",
+        "MATCH (a)<-[:f*1..2]-(b) RETURN a, b",
+        "MATCH (a)-[:f|v*]->(b) RETURN a, b",
+        "MATCH (a)-[:f*2..3]->(b)-[:v]->(c) RETURN a, c",
+        "MATCH (a)-[:f]->(b)-[:v]->(a) RETURN a",
+    ]
+
+    def test_every_shape_matches_oracle(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        n = ex_graph.n_labels
+        for text in self.QUERIES:
+            low = lower_cypher(parse_cypher(text), LABELS, n)
+            if low.is_cpq:
+                got = _pairs(eng.execute(low.ast))
+                want = oracle.cpq_eval(ex_graph, low.ast)
+            else:
+                got = _pairs(eng.execute_rpq(low.ast))
+                want = oracle.rpq_eval(ex_graph, low.ast)
+            assert got == want, text
+
+    def test_pins_filter_endpoints(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        low = lower_cypher(
+            parse_cypher(
+                "MATCH (a)-[:f*]->(b) WHERE a = 3 RETURN a, b"),
+            LABELS, ex_graph.n_labels)
+        got = _pairs(eng.execute_rpq(low.ast, srcs=[low.src]))
+        want = {(v, u) for v, u in oracle.rpq_eval(ex_graph, low.ast)
+                if v == 3}
+        assert got == want
+
+
+# ---------------------------------------------------------------------- #
+# round-trip property
+# ---------------------------------------------------------------------- #
+
+
+def _random_cypher(rng: np.random.Generator) -> CypherQuery:
+    n_hops = int(rng.integers(1, 4))
+    nodes = ["a"] + [f"n{i}" for i in range(1, n_hops)] + ["z"]
+    rels = []
+    for _ in range(n_hops):
+        n_types = int(rng.integers(1, 3))
+        types = tuple(rng.choice(["f", "v", "KNOWS"], n_types,
+                                 replace=False).tolist())
+        lo = int(rng.integers(0, 3))
+        hi = None if rng.random() < 0.4 else lo + int(rng.integers(0, 3))
+        if (lo, hi) == (0, 0):
+            lo, hi = 1, 1
+        if lo == 0 and hi is not None and hi == 0:
+            hi = 1
+        rels.append(Rel(types=types, back=bool(rng.random() < 0.3),
+                        lo=lo, hi=hi))
+    pins = []
+    if rng.random() < 0.5:
+        pins.append(("a", int(rng.integers(0, 9))))
+    if rng.random() < 0.3:
+        pins.append(("z", int(rng.integers(0, 9))))
+    returns = () if rng.random() < 0.3 else ("a", "z")
+    return CypherQuery(nodes=tuple(nodes), rels=tuple(rels),
+                       pins=tuple(pins), returns=returns)
+
+
+class TestRoundTrip:
+    def test_goldens(self):
+        for text in TestEndToEnd.QUERIES:
+            q = parse_cypher(text)
+            assert parse_cypher(render_cypher(q)) == q, text
+
+    def test_random_deterministic(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            q = _random_cypher(rng)
+            assert parse_cypher(render_cypher(q)) == q, render_cypher(q)
+
+    def test_hypothesis_round_trip(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        given, settings, st = (hypothesis.given, hypothesis.settings,
+                               hypothesis.strategies)
+
+        @settings(max_examples=50, deadline=None)
+        @given(seed=st.integers(0, 2**31 - 1))
+        def prop(seed):
+            q = _random_cypher(np.random.default_rng(seed))
+            assert parse_cypher(render_cypher(q)) == q
+
+        prop()

@@ -161,3 +161,80 @@ class TestLookupOrderContract:
         plan = plan_query(q, 2)
         assert plan_lookup_seqs(plan) == [(0,), (1,), (1, 0)]
         assert self._consumption_order(plan) == [(0,), (1,), (1, 0)]
+
+
+class TestFreezePlanCollisions:
+    def test_distinct_plans_never_share_a_frozen_key(self):
+        """`freeze_plan` is the plan-cache / jit key: two *different*
+        plans colliding on one frozen key would silently serve one
+        query's executable for another.  Sweep a broad set of distinct
+        plans (templates, random CPQs, restricted availability) and
+        require the frozen-key map to be injective."""
+        g = random_graph(33, n_max=10, m_max=25)
+        rng = np.random.default_rng(33)
+        qs = [oracle.random_cpq(rng, g, 3) for _ in range(25)]
+        qs += [instantiate_template(t, list(range(TEMPLATE_ARITY[t])))
+               for t in sorted(TEMPLATES)]
+        avail = {(0, 1), (1, 0)}
+        plans = []
+        for q in qs:
+            plans.append(plan_query(q, 2))
+            plans.append(plan_query(q, 2, available=avail))
+            plans.append(plan_query(q, 3))
+        by_key = {}
+        for plan in plans:
+            key = freeze_plan(plan)
+            if key in by_key:
+                assert by_key[key] == plan, (
+                    f"frozen-key collision: {by_key[key]} vs {plan}")
+            by_key[key] = plan
+        # sanity: the sweep actually produced many distinct plans
+        assert len(by_key) > 20
+
+    def test_near_miss_plans_differ(self):
+        """Minimal pairs that a sloppy freeze (e.g. flattening segment
+        lists) would conflate."""
+        pairs = [
+            # one 2-segment lookup vs two 1-segment lookups joined
+            (("lookup", [(0, 1)]),
+             ("join", ("lookup", [(0,)]), ("lookup", [(1,)]))),
+            # segmentation boundary moves
+            (("lookup", [(0,), (1, 2)]), ("lookup", [(0, 1), (2,)])),
+            # conj vs join of the same operands
+            (("join", ("lookup", [(0,)]), ("lookup", [(1,)])),
+             ("conj", ("lookup", [(0,)]), ("lookup", [(1,)]))),
+        ]
+        for a, b in pairs:
+            assert freeze_plan(a) != freeze_plan(b), (a, b)
+
+
+class TestParseErrors:
+    """`parse` must reject malformed CPQ text with the offending
+    position in the message (PR 9 satellite — previously the errors
+    named the problem but not where)."""
+
+    LABELS = {"f": 0, "v": 1}
+
+    def test_each_error_site_reports_position(self):
+        cases = [
+            ("f.@v", "bad token", "position 2"),
+            ("(f.v", "expected ')'", "position 4"),
+            ("f..v", "expected label", "position 2"),
+            ("f.zzz", "unknown label", "position 2"),
+            ("l9", "out of range", "position 0"),
+            ("f v", "trailing", "position 2"),
+            ("f.", "expected label", "position 2"),
+            ("", "expected label", "position 0"),
+        ]
+        for text, frag, pos in cases:
+            with pytest.raises(SyntaxError) as e:
+                parse(text, self.LABELS, 2)
+            assert frag in str(e.value), text
+            assert pos in str(e.value), (text, str(e.value))
+
+    def test_good_text_still_parses(self):
+        q = parse("(f . v) & id", self.LABELS, 2)
+        assert plan_query(q, 2)[0] == "conj_id"
+        # inverse suffix forms
+        assert parse("f-", self.LABELS, 2) == Edge(2)
+        assert parse("f^-1 . v", self.LABELS, 2) is not None

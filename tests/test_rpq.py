@@ -1,0 +1,321 @@
+"""RPQ fixpoint evaluator — deterministic units + differential property.
+
+The engine side is a Glushkov automaton driven as a semi-naive fixpoint
+of per-sequence CPQx lookups (``core.rpq``); the gate is
+``oracle.rpq_eval``, an *independent* Thompson ε-NFA product evaluator
+(different construction, different traversal) — agreement is evidence,
+not tautology.  Deterministic tests pin star termination on cyclic
+graphs, the empty-frontier exit, ε semantics, the inverse/alternation
+algebra, and the |Q|·|V|² pair-space termination bound; the property
+tests sweep random RPQ ASTs over random graphs, locally and on the
+all-devices mesh (1 device in the plain run, 8 in the CI distributed
+step)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import index as cindex, oracle
+from repro.core.engine import Engine
+from repro.core.graph import LabeledGraph, inverse_label
+from repro.core.query import Edge, Identity
+from repro.core.rpq import (
+    FixpointInfo,
+    RAlt,
+    RConcat,
+    RInv,
+    ROpt,
+    RPlus,
+    RStar,
+    RSym,
+    evaluate,
+    glushkov,
+    macro_edges,
+    normalize,
+    rpq_label_runs,
+    rpq_labels,
+    seq_to_cpq,
+)
+
+from conftest import random_graph
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    """All visible devices on one 'engine' axis (1 normally; 8 in the
+    CI distributed step)."""
+    return compat.make_mesh((jax.device_count(),), ("engine",))
+
+
+def _pairs(rows) -> set:
+    return {tuple(r) for r in np.asarray(rows).reshape(-1, 2).tolist()}
+
+
+def cycle_graph(n: int = 5, n_labels: int = 2) -> LabeledGraph:
+    """A directed n-cycle on label 0 plus one chord on label 1 — every
+    star over label 0 must saturate all n² pairs, which only happens
+    after the fixpoint wraps around the cycle (> 1 iteration)."""
+    edges = [(i, (i + 1) % n, 0) for i in range(n)]
+    edges.append((0, n // 2, 1))
+    return LabeledGraph.from_edges(n, n_labels, edges)
+
+
+# ---------------------------------------------------------------------- #
+# automaton construction
+# ---------------------------------------------------------------------- #
+
+
+class TestGlushkov:
+    def test_start_state_has_no_in_edges(self):
+        q = RStar(RConcat(RSym(0), RAlt(RSym(1), RPlus(RSym(0)))))
+        auto = glushkov(q)
+        assert all(t != 0 for _, _, t in auto.transitions)
+
+    def test_nullable_iff_accepts_epsilon(self):
+        assert glushkov(RStar(RSym(0))).nullable
+        assert glushkov(ROpt(RSym(0))).nullable
+        assert not glushkov(RPlus(RSym(0))).nullable
+        assert not glushkov(RConcat(RSym(0), RStar(RSym(1)))).nullable
+        assert glushkov(RConcat(ROpt(RSym(0)), RStar(RSym(1)))).nullable
+
+    def test_state_count_is_positions_plus_start(self):
+        q = RConcat(RSym(0), RConcat(RSym(1), RSym(0)))
+        assert glushkov(q).n_states == 4  # 3 symbol occurrences + start
+
+    def test_inverse_must_be_normalized_first(self):
+        with pytest.raises(ValueError, match="normalize"):
+            glushkov(RInv(RSym(0)))
+
+
+class TestMacroEdges:
+    def test_walks_truncated_at_k(self):
+        auto = glushkov(RConcat(RSym(0), RConcat(RSym(1), RSym(0))))
+        edges = macro_edges(auto, 2)
+        assert all(1 <= len(seq) <= 2
+                   for es in edges.values() for seq, _ in es)
+        # from the start state: the length-1 walk (0,) and the length-2
+        # prefix (0, 1) — truncation keeps every <= k chunk
+        assert {seq for seq, _ in edges[0]} == {(0,), (0, 1)}
+
+    def test_length_one_always_present(self):
+        auto = glushkov(RStar(RSym(1)))
+        edges = macro_edges(auto, 3)
+        for p, es in edges.items():
+            assert any(len(seq) == 1 for seq, _ in es), p
+
+    def test_k_must_be_positive(self):
+        with pytest.raises(ValueError):
+            macro_edges(glushkov(RSym(0)), 0)
+
+
+class TestAlgebra:
+    def test_inverse_of_concat_reverses(self):
+        n = 3
+        got = normalize(RInv(RConcat(RSym(0), RSym(1))), n)
+        want = RConcat(RSym(int(inverse_label(1, n))),
+                       RSym(int(inverse_label(0, n))))
+        assert got == want
+
+    def test_inverse_distributes_over_alternation(self):
+        n = 2
+        got = normalize(RInv(RAlt(RSym(0), RSym(1))), n)
+        assert got == RAlt(RSym(2), RSym(3))
+
+    def test_double_inverse_is_identity(self):
+        q = RStar(RConcat(RSym(0), RAlt(RSym(1), RSym(0))))
+        assert normalize(RInv(RInv(q)), 2) == normalize(q, 2)
+
+    def test_inverse_commutes_with_star(self):
+        n = 2
+        assert (normalize(RInv(RStar(RSym(0))), n)
+                == RStar(RSym(int(inverse_label(0, n)))))
+
+    def test_normalize_without_n_labels_raises_only_when_needed(self):
+        assert normalize(RStar(RSym(0))) == RStar(RSym(0))
+        with pytest.raises(ValueError, match="n_labels"):
+            normalize(RInv(RSym(0)))
+
+    def test_operator_sugar(self):
+        assert RSym(0) * RSym(1) == RConcat(RSym(0), RSym(1))
+        assert RSym(0) | RSym(1) == RAlt(RSym(0), RSym(1))
+        assert RSym(0) * Edge(1) == RConcat(RSym(0), RSym(1))
+
+    def test_labels_and_runs(self):
+        q = RConcat(RSym(0), RConcat(RSym(1), RStar(RConcat(RSym(1),
+                                                            RSym(0)))))
+        assert rpq_labels(q) == {0, 1}
+        assert rpq_label_runs(q) == [[0, 1], [1, 0]]
+
+
+# ---------------------------------------------------------------------- #
+# fixpoint evaluation — deterministic
+# ---------------------------------------------------------------------- #
+
+
+class TestFixpoint:
+    def test_star_terminates_on_cycle_and_saturates(self):
+        """Kleene star over a directed cycle: the canonical
+        non-termination trap.  The fixpoint must converge (finite
+        iterations within the |Q|·|V|² pair-space bound), need more than
+        one iteration (the transitive closure wraps the cycle), and
+        saturate every pair."""
+        g = cycle_graph(5)
+        eng = Engine(cindex.build(g, 2))
+        info = FixpointInfo()
+        rows = eng.execute_rpq(RStar(RSym(0)), info=info)
+        n = g.n_vertices
+        assert _pairs(rows) == {(i, j) for i in range(n) for j in range(n)}
+        assert info.iterations > 1
+        # the termination argument: triples live in Q × V² — both the
+        # iteration count and the materialized triples obey the bound
+        bound = info.states * n * n
+        assert info.iterations <= bound
+        assert info.triples <= bound
+
+    def test_empty_frontier_exits_immediately(self):
+        """A star over a label with no edges: the first expansion joins
+        against an empty relation, the delta empties, and the loop exits
+        after one round with just the ε (identity) answers."""
+        g = LabeledGraph.from_edges(4, 2, [(0, 1, 0)])
+        eng = Engine(cindex.build(g, 2))
+        info = FixpointInfo()
+        rows = eng.execute_rpq(RStar(RSym(1)), info=info)
+        assert _pairs(rows) == {(v, v) for v in range(4)}
+        assert info.iterations == 1
+
+    def test_epsilon_semantics_match_identity(self, ex_graph):
+        """Nullable RPQs include the identity pairs — the same relation
+        ``cpq_eval(Identity)`` defines."""
+        eng = Engine(cindex.build(ex_graph, 2))
+        ident = oracle.cpq_eval(ex_graph, Identity())
+        star = _pairs(eng.execute_rpq(RStar(RSym(0))))
+        opt = _pairs(eng.execute_rpq(ROpt(RSym(0))))
+        plus = _pairs(eng.execute_rpq(RPlus(RSym(0))))
+        assert ident <= star and ident <= opt
+        assert not ident <= plus  # 'f' has no self-loop in example_graph
+
+    def test_plus_is_concat_star(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        a = RConcat(RSym(0), RSym(1))
+        assert _pairs(eng.execute_rpq(RPlus(a))) == _pairs(
+            eng.execute_rpq(RConcat(a, RStar(a))))
+
+    def test_alternation_is_union(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        got = _pairs(eng.execute_rpq(RAlt(RSym(0), RSym(1))))
+        assert got == (_pairs(eng.execute_rpq(RSym(0)))
+                       | _pairs(eng.execute_rpq(RSym(1))))
+
+    def test_inverse_transposes(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        q = RConcat(RSym(0), RStar(RSym(1)))
+        fwd = _pairs(eng.execute_rpq(q))
+        rev = _pairs(eng.execute_rpq(RInv(q),
+                                     n_labels=ex_graph.n_labels))
+        assert rev == {(u, v) for (v, u) in fwd}
+
+    def test_source_and_dest_pins(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        q = RStar(RSym(0))
+        full = _pairs(eng.execute_rpq(q))
+        got = _pairs(eng.execute_rpq(q, srcs=[3, 4], dsts=[0, 1, 2]))
+        assert got == {(s, d) for (s, d) in full
+                       if s in (3, 4) and d in (0, 1, 2)}
+        with pytest.raises(ValueError, match="out of range"):
+            eng.execute_rpq(q, srcs=[99])
+
+    def test_lookups_batched_and_cached(self, ex_graph):
+        """Relations are fetched lazily in one execute_batch per round
+        and cached: distinct sequences, not iterations × sequences."""
+        eng = Engine(cindex.build(ex_graph, 2))
+        info = FixpointInfo()
+        eng.execute_rpq(RStar(RConcat(RSym(0), RSym(1))), info=info)
+        assert info.lookup_batches <= info.iterations
+        assert info.lookups == len({seq for es in macro_edges(
+            glushkov(RStar(RConcat(RSym(0), RSym(1)))),
+            2).values() for seq, _ in es})
+
+    def test_seq_to_cpq_is_join_chain(self):
+        q = seq_to_cpq((0, 1, 0))
+        assert oracle.cpq_eval(cycle_graph(4), q) is not None  # evaluable
+        from repro.core.query import Join
+        assert q == Join(Join(Edge(0), Edge(1)), Edge(0))
+
+
+# ---------------------------------------------------------------------- #
+# differential: engine fixpoint == Thompson oracle
+# ---------------------------------------------------------------------- #
+
+_SHAPES = [
+    RSym(0),
+    RStar(RSym(0)),
+    RPlus(RConcat(RSym(0), RSym(1))),
+    RAlt(RSym(0), RSym(1)),
+    RConcat(RSym(0), RStar(RSym(1))),
+    RConcat(ROpt(RSym(0)), RPlus(RSym(1))),
+    RStar(RAlt(RSym(0), RSym(1))),
+    RConcat(RInv(RSym(0)), RSym(1)),
+    RStar(RAlt(RSym(0), RInv(RSym(1)))),
+    RInv(RStar(RConcat(RSym(0), RSym(1)))),
+]
+
+
+class TestDifferential:
+    def test_shape_suite_example_graph(self, ex_graph):
+        eng = Engine(cindex.build(ex_graph, 2))
+        for q in _SHAPES:
+            got = _pairs(eng.execute_rpq(q, n_labels=ex_graph.n_labels))
+            assert got == oracle.rpq_eval(ex_graph, q), q
+
+    def test_shape_suite_sharded(self, ex_graph, mesh1):
+        """The same fixpoint over the sharded engine: every per-sequence
+        lookup rides the mesh backend; answers must be identical to
+        local and to the oracle (n_shards ∈ {1, 8} acceptance)."""
+        idx = cindex.build(ex_graph, 2)
+        local = Engine(idx)
+        sharded = Engine(idx, mesh=mesh1)
+        for q in _SHAPES:
+            a = local.execute_rpq(q, n_labels=ex_graph.n_labels)
+            b = sharded.execute_rpq(q, n_labels=ex_graph.n_labels)
+            assert np.array_equal(a, b), q
+            assert _pairs(b) == oracle.rpq_eval(ex_graph, q), q
+
+    def test_random_graphs_deterministic(self):
+        """Seeded random RPQs on seeded random graphs — the always-on
+        cousin of the hypothesis property below."""
+        for seed in range(6):
+            g = random_graph(seed, n_max=14, n_labels=2, m_max=30)
+            eng = Engine(cindex.build(g, 2))
+            rng = np.random.default_rng(100 + seed)
+            for _ in range(4):
+                q = oracle.random_rpq(rng, g)
+                info = FixpointInfo()
+                got = _pairs(evaluate(eng, q, n_labels=g.n_labels,
+                                      info=info))
+                assert got == oracle.rpq_eval(g, q), (seed, q)
+                assert info.iterations <= info.states * g.n_vertices ** 2
+
+
+class TestHypothesisProperty:
+    def test_engine_matches_nfa_product_oracle(self, mesh1):
+        """Random RPQ ASTs on random graphs: the Glushkov fixpoint and
+        the Thompson product agree, locally and on the all-devices
+        mesh."""
+        hypothesis = pytest.importorskip("hypothesis")
+        given, settings, st = (hypothesis.given, hypothesis.settings,
+                               hypothesis.strategies)
+
+        @settings(max_examples=20, deadline=None)
+        @given(gseed=st.integers(0, 2**31 - 1),
+               qseed=st.integers(0, 2**31 - 1))
+        def prop(gseed, qseed):
+            g = random_graph(gseed, n_max=12, n_labels=2, m_max=24)
+            q = oracle.random_rpq(np.random.default_rng(qseed), g)
+            want = oracle.rpq_eval(g, q)
+            idx = cindex.build(g, 2)
+            for eng in (Engine(idx), Engine(idx, mesh=mesh1)):
+                got = _pairs(eng.execute_rpq(q, n_labels=g.n_labels))
+                assert got == want, q
+
+        prop()
