@@ -1,0 +1,200 @@
+"""Persistent-worker cluster serving — the PR 10 cluster gate.
+
+For each worker count in {1, 2, 4} a fresh fleet (one coordinator, N
+persistent worker processes, each owning one canonical shard slice of
+the CPQx index) serves the same lifecycle a production deployment
+would, and every answer along the way is checked two ways: bit-identical
+(``np.array_equal``, not set-equal — the canonical merge order is part
+of the contract) against a single-process :class:`Engine` bound to the
+same index, and set-equal against the numpy oracle on the graph the
+query actually saw.
+
+The lifecycle per worker count, in order:
+
+1. **queries** — the full Fig. 5 template suite (random labels, one per
+   template) plus one RPQ fixpoint shape, timed through
+   :class:`QueryService` for the qps/p50/p99 rows.
+2. **maintenance flush** — graph updates through the service write
+   path; the drain broadcasts exactly one FLUSH_REBIND to the fleet,
+   then the suite re-runs against the updated graph's oracle.
+3. **interest round** — ``insert_interest`` lands as one INTEREST_BATCH
+   instruction; the suite re-runs on the extended index.
+4. **kill-one-worker recovery** — a worker is hard-killed
+   (``proc.kill()``); the heartbeat detects it, the coordinator
+   respawns from the promotion base + instruction replay, and the suite
+   re-runs bit-identical with ``runtime.recoveries`` incremented.
+
+Any mismatch or missing instruction/recovery fails the gate and the
+bench exits non-zero.
+
+    PYTHONPATH=src python -m benchmarks.bench_cluster [--smoke] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import cluster as cl
+from repro.core import oracle
+from repro.core.engine import Engine
+from repro.core.maintenance import MaintainableIndex
+from repro.core.rpq import RAlt, RConcat, RStar, RSym
+from repro.core.service import QueryService
+from repro.data.graphs import random_queries_for_graph
+
+from .common import DATASETS, TEMPLATE_NAMES, emit
+
+WORKER_COUNTS = (1, 2, 4)
+
+# graph updates for the maintenance phase (write path -> FLUSH_REBIND)
+UPDATES = [("insert_edge", 0, 1, 0), ("insert_edge", 1, 2, 1)]
+
+
+def _rows(arr) -> set:
+    return {tuple(r) for r in np.asarray(arr).tolist()}
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def _rpq():
+    # (l0 | l1)* . l2 — alternation under a fixpoint, then a concat:
+    # exercises the masked-frontier iteration end to end per worker.
+    return RConcat(RStar(RAlt(RSym(0), RSym(1))), RSym(2))
+
+
+def _check_suite(tag, queries, svc, ref, maint, mismatches):
+    """Serve every query through the cluster service; gate bit-identity
+    vs the local reference engine and set-equality vs the oracle."""
+    for name, q in queries:
+        got = svc.query(q)
+        if not np.array_equal(got, ref.execute(q)):
+            mismatches.append((tag, name, "bit"))
+        if _rows(got) != oracle.cpq_eval(maint.g, q):
+            mismatches.append((tag, name, "oracle"))
+    got = svc.engine.execute_rpq(_rpq())
+    if not np.array_equal(got, ref.execute_rpq(_rpq())):
+        mismatches.append((tag, "rpq", "bit"))
+    if _rows(got) != oracle.rpq_eval(maint.g, _rpq()):
+        mismatches.append((tag, "rpq", "oracle"))
+
+
+def bench_cluster(ds: str, n_per: int) -> bool:
+    g = DATASETS[ds]()
+    k = 2
+    # singleton interests for every label keep the whole template suite
+    # plannable while leaving headroom for the interest-round phase.
+    interests = [(lbl,) for lbl in range(g.alphabet_size)]
+    failed = False
+
+    for n in WORKER_COUNTS:
+        maint = MaintainableIndex.build(g, k, interests=interests)
+        ref = Engine(maint.flush())
+        eng = Engine(maint.flush(), cluster=n)
+        runtime = eng.backend.runtime
+        svc = QueryService(eng, maintainer=maint, max_batch=8)
+        queries = random_queries_for_graph(maint.g, TEMPLATE_NAMES, n_per,
+                                           seed=7)
+        mismatches: list = []
+        try:
+            # phase 1: queries, timed --------------------------------- #
+            lat = []
+            t0 = time.perf_counter()
+            for _, q in queries:
+                t = time.perf_counter()
+                svc.query(q)
+                lat.append((time.perf_counter() - t) * 1e6)
+            wall = time.perf_counter() - t0
+            _check_suite("queries", queries, svc, ref, maint, mismatches)
+            emit(f"cluster/{ds}/workers{n}/qps", 0.0,
+                 f"qps={len(lat) / wall:.1f}")
+            emit(f"cluster/{ds}/workers{n}/p50", _pct(lat, 50),
+                 f"n={len(lat)}")
+            emit(f"cluster/{ds}/workers{n}/p99", _pct(lat, 99),
+                 f"n={len(lat)}")
+
+            # phase 2: maintenance flush ------------------------------ #
+            before_fr = runtime.instructions[cl.FLUSH_REBIND]
+            svc.apply_updates(list(UPDATES))
+            svc.query(queries[0][1])  # drains the coalesced write batch
+            ref.rebind(maint.flush())
+            _check_suite("maintenance", queries, svc, ref, maint,
+                         mismatches)
+            rebinds = runtime.instructions[cl.FLUSH_REBIND] - before_fr
+            ok = rebinds == 1
+            emit(f"cluster/{ds}/workers{n}/maintenance", 0.0,
+                 f"flush_rebinds={rebinds};{'PASS' if ok else 'FAIL'}")
+            failed |= not ok
+
+            # phase 3: interest round --------------------------------- #
+            before_ib = runtime.instructions[cl.INTEREST_BATCH]
+            svc.insert_interest((0, 1))
+            svc.query(queries[0][1])  # drains the interest batch
+            ref.rebind(maint.flush())
+            _check_suite("interest", queries, svc, ref, maint, mismatches)
+            rounds = runtime.instructions[cl.INTEREST_BATCH] - before_ib
+            ok = rounds >= 1
+            emit(f"cluster/{ds}/workers{n}/interest", 0.0,
+                 f"interest_batches={rounds};{'PASS' if ok else 'FAIL'}")
+            failed |= not ok
+
+            # phase 4: kill-one-worker recovery ----------------------- #
+            # fresh labels: the service result cache must not be able to
+            # answer these — the fleet itself has to come back.
+            q_rec = random_queries_for_graph(maint.g, TEMPLATE_NAMES,
+                                             n_per, seed=23)
+            before_rec = runtime.recoveries
+            runtime._workers[n - 1].proc.kill()
+            time.sleep(0.3)
+            _check_suite("recovery", q_rec, svc, ref, maint, mismatches)
+            ok = runtime.recoveries > before_rec
+            emit(f"cluster/{ds}/workers{n}/recovery", 0.0,
+                 f"recoveries={runtime.recoveries - before_rec};"
+                 f"{'PASS' if ok else 'FAIL'}")
+            failed |= not ok
+
+            ok = not mismatches
+            emit(f"cluster/{ds}/workers{n}/answers", 0.0,
+                 f"checks={4 * (len(queries) + 1)};"
+                 f"mismatches={len(mismatches)};"
+                 f"{'PASS' if ok else 'FAIL'}")
+            if mismatches:
+                for tag, name, kind in mismatches[:8]:
+                    emit(f"cluster/{ds}/workers{n}/mismatch", 0.0,
+                         f"{tag}/{name}/{kind}")
+            failed |= not ok
+        finally:
+            eng.backend.shutdown()
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI config (one dataset, 1 query/template)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON")
+    args, _ = ap.parse_known_args()
+
+    jobs = [("skewed-hub-small", 1)] if args.smoke else \
+        [("skewed-hub-small", 2), ("skewed-hub", 1)]
+
+    failed = False
+    for ds, n_per in jobs:
+        failed |= bench_cluster(ds, n_per)
+
+    if args.json:
+        from .common import write_json
+
+        write_json(args.json, bench="bench_cluster", smoke=args.smoke)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

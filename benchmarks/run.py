@@ -31,6 +31,7 @@ BENCHES = {
     "recovery": "benchmarks.bench_recovery",  # kill-and-recover TTFCA (PR 6)
     "serving": "benchmarks.bench_serving",  # multi-tenant SLO serving (PR 7)
     "rpq": "benchmarks.bench_rpq",  # RPQ fixpoints + Cypher surface (PR 9)
+    "cluster": "benchmarks.bench_cluster",  # worker-process fleet (PR 10)
 }
 
 

@@ -123,11 +123,15 @@ class BatchHandle:
 class Engine:
     """Query engine bound to a built index.
 
-    ``mesh``/``axis`` select the execution backend: ``None`` (default)
-    binds the single-device :class:`LocalBackend`; a mesh binds a
-    :class:`~repro.core.distributed.ShardedBackend` that shards the index
-    over the mesh axis and evaluates every plan inside one ``shard_map``.
-    Either way the public API — ``execute``, ``execute_batch``,
+    ``mesh``/``axis``/``cluster`` select the execution backend: ``None``
+    (default) binds the single-device :class:`LocalBackend`; a mesh binds
+    a :class:`~repro.core.distributed.ShardedBackend` that shards the
+    index over the mesh axis and evaluates every plan inside one
+    ``shard_map``; ``cluster=n`` (an int, or a pre-built
+    :class:`~repro.core.cluster.ClusterRuntime`) binds a
+    :class:`~repro.core.cluster.ClusterBackend` serving off ``n``
+    persistent worker *processes* driven over an instruction stream.
+    Whichever way, the public API — ``execute``, ``execute_batch``,
     ``rebind`` — is identical, and answers are bit-identical.
 
     ``optimize`` selects the planner: True (default) runs the cost-based
@@ -146,9 +150,13 @@ class Engine:
     """
 
     def __init__(self, index: CPQxIndex, mesh=None, axis: str = "engine",
-                 optimize: bool = True, cost_table=None):
+                 optimize: bool = True, cost_table=None, cluster=None):
+        if mesh is not None and cluster is not None:
+            raise ValueError("mesh and cluster are mutually exclusive "
+                             "backend selectors")
         self.mesh = mesh
         self.axis = axis
+        self.cluster = cluster
         self.optimize = optimize
         self.cost_table = cost_table
         self.telemetry = LadderTelemetry()
@@ -179,7 +187,22 @@ class Engine:
         self._class_sizes = self.stats.class_sizes
         self._l2c_host = self.stats.l2c_cls
         self._default_caps = default_caps(index)  # one device sync, here
-        if self.mesh is None:
+        if self.cluster is not None:
+            from .cluster import ClusterBackend, ClusterRuntime
+
+            prev = getattr(self, "backend", None)
+            if isinstance(prev, ClusterBackend):
+                prev.reshard(index)  # one FLUSH_REBIND/INTEREST broadcast
+            elif isinstance(self.cluster, ClusterRuntime):
+                if not self.cluster.started:
+                    self.cluster.start(index)
+                self.backend = ClusterBackend(self.cluster)
+                if self.cluster.index is not index:
+                    self.backend.reshard(index)
+            else:
+                self.backend = ClusterBackend.from_index(
+                    index, int(self.cluster))
+        elif self.mesh is None:
             self.backend: ExecutionBackend = LocalBackend(
                 index.arrays, index.n_vertices)
         else:
@@ -201,6 +224,17 @@ class Engine:
                                   available=self._available,
                                   cost_table=self.cost_table)
         return plan_query(q, self.index.k, available=self._available)
+
+    def predict_cost_ns(self, plan) -> float:
+        """Calibrated prediction of one dispatch of ``plan`` in device
+        nanoseconds — what the service's SLO-aware shedding prices a
+        request at *before* admitting it.  0.0 without a cost table (the
+        row-count objective has no time unit), so SLO shedding is
+        automatically inert on uncalibrated engines."""
+        if self.cost_table is None:
+            return 0.0
+        est = estimate_plan(plan, self.stats, cost_table=self.cost_table)
+        return float(est.cost_ns)
 
     def estimate_caps(self, ranges: np.ndarray, shape,
                       plan=None) -> QueryCaps:

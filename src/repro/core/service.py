@@ -47,10 +47,22 @@ Multi-tenant serving (PR 7): every request carries a ``tenant`` id
 * **pipelined drain** — each round is dispatched asynchronously
   (``Engine.dispatch_batch``) and the *next* round's host work (cache
   re-check, dedup, planning, capacity estimation) overlaps the device
-  execution before the earlier round is harvested.  Cache re-check is
-  per round: duplicates across in-flight rounds may execute twice (a
-  deliberate trade of cross-round dedup for overlap); duplicates within
-  a round always fold.
+  execution before the earlier round is harvested.  Duplicates fold
+  *across* in-flight rounds too: a request whose query is already
+  executing in the previous (dispatched, unharvested) round joins that
+  round's result instead of re-executing — the join is pure host
+  bookkeeping on the not-yet-finalized round, so the pipeline never
+  re-serializes (``ServiceStats.cross_round_joins`` counts them).
+* **SLO-aware shedding** — with ``slo_ns`` set (one budget, or a
+  per-tenant dict) *and* a calibrated engine (``cost_table``), a submit
+  is priced at its plan's predicted dispatch cost
+  (:meth:`Engine.predict_cost_ns`); when the queue's predicted backlog
+  plus this request exceeds the tenant's latency budget, the request is
+  shed *by predicted cost* — an expensive query sheds where a cheap one
+  still admits, instead of both counting 1 against queue depth.
+  ``QueryRequest.shed_reason`` / ``TenantStats.shed_reasons`` say which
+  gate fired (``"queue"``, ``"tenant_queue"``, ``"slo"``).  Without a
+  cost table predictions are 0.0 and the SLO gate is inert.
 * **union dispatch** — with ``union=True`` the engine fuses leftover
   sub-``min_bucket`` shape buckets into one union-executable dispatch
   (``core.backend.run_union_batch``), so heterogeneous tenant traffic
@@ -149,7 +161,9 @@ class QueryRequest:
     done: bool = False
     from_cache: bool = False
     shed: bool = False  # rejected by admission control at submit
+    shed_reason: str | None = None  # which gate: queue/tenant_queue/slo
     voted: bool = False  # already credited to the workload sketch
+    predicted_ns: float = 0.0  # calibrated dispatch cost (SLO pricing)
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -165,6 +179,10 @@ class TenantStats:
     served: int = 0
     shed: int = 0  # rejected at submit by admission control
     cache_hits: int = 0
+    # which admission gate shed, and how often: "queue" (global depth),
+    # "tenant_queue" (per-tenant depth), "slo" (predicted cost over the
+    # tenant's latency budget)
+    shed_reasons: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -174,6 +192,8 @@ class ServiceStats:
     cache_hits: int = 0
     executed: int = 0  # queries that reached the device
     deduped: int = 0  # in-flight duplicates folded into one execution
+    cross_round_joins: int = 0  # requests that joined a query already
+    # dispatched in the previous (unharvested) round
     flushes: int = 0
     drain_rounds: int = 0  # fair-share rounds across all flushes
     shed: int = 0  # requests rejected at submit (queue full)
@@ -220,7 +240,8 @@ class QueryService:
                  maintainer=None, adapter=None, adapt_interval: int = 64,
                  max_queue: int | None = None,
                  max_queue_per_tenant: int | None = None,
-                 auto_flush: bool = True, union: bool = False):
+                 auto_flush: bool = True, union: bool = False,
+                 slo_ns: float | dict | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.engine = engine
@@ -232,6 +253,11 @@ class QueryService:
         # matter to callers that burst-submit with auto_flush=False.
         self.max_queue = max_queue
         self.max_queue_per_tenant = max_queue_per_tenant
+        # SLO-aware shedding: a latency budget in device nanoseconds —
+        # one float for every tenant, or {tenant: budget} (missing
+        # tenants are unbudgeted).  Only bites on a calibrated engine:
+        # without a cost table every prediction is 0.0.
+        self.slo_ns = slo_ns
         self.auto_flush = auto_flush
         self.union = union  # fuse straggler shape buckets per round
         self.graph_epoch = 0
@@ -299,27 +325,50 @@ class QueryService:
             req.voted = True
             self._maybe_adapt()
             return req
-        if not self._admit(req):
-            # explicit shed at the door: the caller learns immediately,
-            # and an *accepted* request is never dropped later
-            req.shed, req.done = True, True
+        reason = self._admit(req)
+        if reason is not None:
+            # explicit shed at the door: the caller learns immediately
+            # (and why), and an *accepted* request is never dropped later
+            req.shed, req.done, req.shed_reason = True, True, reason
             req.t_done = time.perf_counter()
             self.stats.shed += 1
             tstats.shed += 1
+            tstats.shed_reasons[reason] = \
+                tstats.shed_reasons.get(reason, 0) + 1
             return req
         self._queue.append(req)
         if self.auto_flush and len(self._queue) >= self.max_batch:
             self.flush()
         return req
 
-    def _admit(self, req: QueryRequest) -> bool:
+    def _admit(self, req: QueryRequest) -> str | None:
+        """Admission control at the door: returns the shed reason, or
+        None to admit."""
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
-            return False
+            return "queue"
         if self.max_queue_per_tenant is not None:
             held = sum(r.tenant == req.tenant for r in self._queue)
             if held >= self.max_queue_per_tenant:
-                return False
-        return True
+                return "tenant_queue"
+        budget = self._slo_budget(req.tenant)
+        if budget is not None and not isinstance(req.query, RPQ):
+            # price THIS request (its plan's calibrated dispatch cost) on
+            # top of the queue's predicted backlog; an expensive query
+            # sheds where a cheap one still admits.  RPQs are exempt —
+            # the fixpoint has no single plan to price.
+            req.predicted_ns = self.engine.predict_cost_ns(
+                self._plan(req.query))
+            backlog = sum(r.predicted_ns for r in self._queue)
+            if backlog + req.predicted_ns > budget:
+                return "slo"
+        return None
+
+    def _slo_budget(self, tenant: str) -> float | None:
+        if self.slo_ns is None:
+            return None
+        if isinstance(self.slo_ns, dict):
+            return self.slo_ns.get(tenant)
+        return float(self.slo_ns)
 
     def flush(self) -> list[QueryRequest]:
         """Drain the whole queue and return the completed requests.
@@ -347,7 +396,7 @@ class QueryService:
         try:
             self._drain_updates()
             while True:
-                nxt = self._prepare_round()
+                nxt = self._prepare_round(inflight)
                 if nxt is None and inflight is None:
                     break
                 took = took or nxt is not None
@@ -396,14 +445,19 @@ class QueryService:
         self._queue = [r for r in self._queue if id(r) not in taken]
         return take
 
-    def _prepare_round(self) -> _Round | None:
+    def _prepare_round(self, inflight: _Round | None = None) -> _Round | None:
         """Host-side half of one drain round: cache re-check, dedup,
         voting, planning.  Runs while the previous round executes on
-        device."""
+        device.
+
+        ``inflight`` is the previous round, already dispatched but not
+        yet harvested: a request whose query is executing there *joins
+        that round* — pure host bookkeeping (append to its request
+        lists; ``_finalize_round`` walks them at harvest time), so the
+        duplicate neither re-executes nor stalls the pipeline."""
         batch = self._take_round()
         if not batch:
             return None
-        self.stats.drain_rounds += 1
         todo: list[QueryRequest] = []
         for req in batch:
             cached = self._cache_get(req.query)
@@ -437,6 +491,25 @@ class QueryService:
             for t, w in per_tenant.items():
                 self._observe(q, weight=w, tick=first, tenant=t)
                 first = False
+        # cross-round dedup: queries already dispatched in the previous
+        # round move their requests over to it (they complete when that
+        # round harvests) instead of dispatching the same query twice
+        if inflight is not None:
+            moved: set = set()
+            for q in [q for q in queries if q in inflight.by_query]:
+                joiners = by_query.pop(q)
+                inflight.by_query[q].extend(joiners)
+                inflight.todo.extend(joiners)
+                inflight.reqs.extend(joiners)
+                moved.update(id(r) for r in joiners)
+                self.stats.cross_round_joins += len(joiners)
+            if moved:
+                batch = [r for r in batch if id(r) not in moved]
+                todo = [r for r in todo if id(r) not in moved]
+                queries = list(by_query)
+        if not batch:  # every request joined the in-flight round
+            return None
+        self.stats.drain_rounds += 1
         cpq_queries = [q for q in queries if not isinstance(q, RPQ)]
         rpq_queries = [q for q in queries if isinstance(q, RPQ)]
         plans = [self._plan(q) for q in cpq_queries]
@@ -634,8 +707,19 @@ class QueryService:
         self.flush()  # drain pending writes AND reads at one epoch
         if step is None:
             step = self._ckpt_step
+        # a cluster backend checkpoints through a barrier: every worker
+        # acks and reports the coordinator's state epoch (catching any
+        # missed state instruction) before the snapshot is cut, and the
+        # committed step becomes the fleet's respawn base
+        quiesce = getattr(self.engine.backend, "quiesce", None)
+        if quiesce is not None:
+            quiesce(step)
         leaves, extra = lifecycle.service_leaves(self)
         lifecycle.save_checkpoint(ckpt_dir, step, leaves, extra=extra)
+        committed = getattr(self.engine.backend, "checkpoint_committed",
+                            None)
+        if committed is not None:
+            committed(ckpt_dir, step)
         self._ckpt_step = step + 1
         return step
 

@@ -347,3 +347,113 @@ class TestMultiTenantServing:
         for q, r in zip(qs, reqs):
             assert _rows(r.result) == oracle.cpq_eval(ex_graph, q), q
         assert svc.engine.telemetry.union_lanes > 0
+
+
+class TestCrossRoundDedup:
+    """A request identical to one already dispatched in a *previous*
+    (unharvested) round joins that round's result instead of
+    re-executing — the satellite fix for the pipelined drain's old
+    execute-twice trade."""
+
+    def test_duplicate_joins_previous_rounds_dispatch(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_batch=1, auto_flush=False)
+        qa = instantiate_template("T", [0, 0, 1])
+        qb = instantiate_template("C2", [0, 1])
+        reqs = [svc.submit(qa), svc.submit(qa), svc.submit(qb)]
+        done = svc.flush()
+        assert len(done) == 3 and all(r.done for r in reqs)
+        gt = oracle.cpq_eval(ex_graph, qa)
+        assert _rows(reqs[0].result) == gt
+        assert _rows(reqs[1].result) == gt
+        assert _rows(reqs[2].result) == oracle.cpq_eval(ex_graph, qb)
+        assert svc.stats.cross_round_joins == 1
+        assert svc.stats.executed == 2  # qa once, qb once — no re-execute
+        assert svc.stats.deduped == 1  # the joiner folded at finalize
+
+    def test_third_duplicate_lands_on_the_result_cache(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_batch=1, auto_flush=False)
+        q = instantiate_template("T", [0, 0, 1])
+        reqs = [svc.submit(q) for _ in range(3)]
+        svc.flush()
+        gt = oracle.cpq_eval(ex_graph, q)
+        assert all(_rows(r.result) == gt for r in reqs)
+        assert svc.stats.executed == 1  # one device execution for all 3
+        assert svc.stats.cross_round_joins == 1  # req 2 joined round 1
+        assert svc.stats.cache_hits == 1  # req 3 hit the published answer
+
+    def test_joiners_votes_and_tenancy_still_count(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_batch=1, auto_flush=False)
+        q = instantiate_template("C2", [0, 1])
+        svc.submit(q, tenant="a")
+        svc.submit(q, tenant="b")
+        svc.flush()
+        a, b = svc.stats.tenant("a"), svc.stats.tenant("b")
+        assert (a.submitted, a.served) == (1, 1)
+        assert (b.submitted, b.served) == (1, 1)
+
+
+class TestSLOShedding:
+    """Satellite: with a DeviceCostTable present, admission sheds by
+    *predicted dispatch cost* against a per-tenant latency budget."""
+
+    def _engine(self, g):
+        from test_costmodel import _toy_table
+
+        return Engine(cindex.build(g, 2), cost_table=_toy_table())
+
+    def test_shed_by_predicted_cost_with_reason(self, ex_graph):
+        eng = self._engine(ex_graph)
+        q = instantiate_template("TT", [0, 1, 0, 1, 2])  # join: expensive
+        cost = eng.predict_cost_ns(eng.plan(q))
+        assert cost > 0
+        svc = QueryService(eng, slo_ns=cost * 0.5, auto_flush=False)
+        r = svc.submit(q)
+        assert r.shed and r.done and r.result is None
+        assert r.shed_reason == "slo"
+        ts = svc.stats.tenant(r.tenant)
+        assert ts.shed == 1 and ts.shed_reasons == {"slo": 1}
+
+    def test_backlog_accumulates_until_the_budget_sheds(self, ex_graph):
+        eng = self._engine(ex_graph)
+        q = instantiate_template("TT", [0, 1, 0, 1, 2])
+        cost = eng.predict_cost_ns(eng.plan(q))
+        svc = QueryService(eng, slo_ns=cost * 2.5, auto_flush=False)
+        r1, r2, r3 = (svc.submit(q) for _ in range(3))
+        assert not r1.shed and not r2.shed  # backlog 1c, then 2c <= 2.5c
+        assert r3.shed and r3.shed_reason == "slo"  # 3c > 2.5c
+        done = svc.flush()
+        assert {id(x) for x in done} == {id(r1), id(r2)}
+        gt = oracle.cpq_eval(ex_graph, q)
+        assert _rows(r1.result) == gt and _rows(r2.result) == gt
+
+    def test_per_tenant_budgets(self, ex_graph):
+        eng = self._engine(ex_graph)
+        q = instantiate_template("TT", [0, 1, 0, 1, 2])
+        cost = eng.predict_cost_ns(eng.plan(q))
+        svc = QueryService(eng, slo_ns={"free": cost * 0.5},
+                           auto_flush=False)
+        assert svc.submit(q, tenant="free").shed_reason == "slo"
+        assert not svc.submit(q, tenant="paid").shed  # unbudgeted admits
+        svc.flush()
+
+    def test_inert_without_a_cost_table(self, ex_graph):
+        # no table -> every prediction is 0.0 -> the SLO gate never fires
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           slo_ns=1.0, auto_flush=False)
+        q = instantiate_template("TT", [0, 1, 0, 1, 2])
+        assert not svc.submit(q).shed
+        svc.flush()
+
+    def test_queue_depth_gates_still_report_reasons(self, ex_graph):
+        svc = QueryService(Engine(cindex.build(ex_graph, 2)),
+                           max_queue=1, auto_flush=False)
+        q1 = instantiate_template("C2", [0, 1])
+        q2 = instantiate_template("C2", [1, 0])
+        assert not svc.submit(q1).shed
+        r = svc.submit(q2)
+        assert r.shed and r.shed_reason == "queue"
+        assert svc.stats.tenant(r.tenant).shed_reasons == {"queue": 1}
+        svc.flush()
